@@ -1,0 +1,72 @@
+"""Render the SS Roofline table from results/dryrun.json.
+
+Usage: python -m benchmarks.roofline [--json results/dryrun.json] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_table(results: list[dict], mesh: str = "single") -> str:
+    rows = [r for r in results if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = []
+    out.append(
+        "| arch | shape | mb | compute_s | memory_s | collective_s | "
+        "dominant | roofline_bound_s | MODEL_FLOPS/dev | useful_frac | "
+        "temp GiB | fits |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"skipped | - | - | - | - | ({r['reason']}) |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"ERROR | - | - | - | - | {r.get('error','')[:40]} |")
+            continue
+        ro = r["roofline"]
+        temp = r["memory"]["temp_bytes"] / 2**30
+        fits = "yes" if temp <= 16 else f"NO ({temp:.0f}G)"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('microbatches') or '-'} "
+            f"| {ro['compute_s']*1e3:.1f}ms | {ro['memory_s']*1e3:.1f}ms "
+            f"| {ro['collective_s']*1e3:.1f}ms | {ro['dominant']} "
+            f"| {ro['step_time_s']*1e3:.1f}ms "
+            f"| {r['model_flops_per_dev']/1e12:.1f}T "
+            f"| {r['useful_flop_frac']:.2f} | {temp:.1f} | {fits} |")
+    return "\n".join(out)
+
+
+def summarize(results: list[dict]) -> str:
+    ok = [r for r in results if r["status"] == "ok"]
+    dominant = {}
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        dominant[d] = dominant.get(d, 0) + 1
+    lines = [f"cells ok: {len(ok)}; dominant terms: {dominant}"]
+    worst = sorted(
+        (r for r in ok if r["shape"] == "train_4k" and r["mesh"] == "single"),
+        key=lambda r: -(r["roofline"]["step_time_s"]
+                        / max(r["roofline"]["compute_s"], 1e-12)))
+    if worst:
+        lines.append("most roofline-distant train cells: " + ", ".join(
+            f"{r['arch']} ({r['roofline']['step_time_s']/max(r['roofline']['compute_s'],1e-12):.1f}x compute)"
+            for r in worst[:3]))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    results = json.load(open(args.json))
+    print(fmt_table(results, args.mesh))
+    print()
+    print(summarize(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), then the
+human-readable sections.  The multi-pod dry-run / roofline tables are produced
+separately by ``python -m repro.launch.dryrun --all`` +
+``python -m benchmarks.roofline`` (they need the 512-device flag set at
+process start).
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    t_all = time.perf_counter()
+    rows: list[tuple[str, float, str]] = []
+
+    from benchmarks import bench_control_flow as bcf
+    t0 = time.perf_counter()
+    s = bcf.summary()
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig9_trace_discrepancy", dt,
+                 f"avg={s['avg_discrepancy_pct']:.2f}%;"
+                 f"zero={s['zero_discrepancy']}/{s['executions']}"))
+    rows.append(("fig10_ipc_delta", dt,
+                 f"avg_abs={s['avg_abs_ipc_delta_pct']:.2f}%;"
+                 f"bfsd_gain={s['bfsd_ipc_gain_pct']:.1f}%;"
+                 f"bfsd_util_gain={s['bfsd_util_gain_pct']:.1f}%"))
+
+    t0 = time.perf_counter()
+    hw = bcf.hw_cost_rows()
+    dt = (time.perf_counter() - t0) * 1e6
+    h8 = next(r for r in hw if r["n_bx"] == 8)
+    rows.append(("sec9a_hw_cost", dt,
+                 f"hanoi={h8['hanoi_bytes']}B;simt={h8['simt_stack_bytes']}B;"
+                 f"saving={h8['saving_frac']:.1%}"))
+
+    t0 = time.perf_counter()
+    thr = bcf.engine_throughput()
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(("engine_throughput", dt,
+                 f"jax={thr['jax_warps_per_s']:.0f}w/s;"
+                 f"numpy={thr['numpy_warps_per_s']:.0f}w/s;"
+                 f"speedup={thr['speedup']:.2f}x"))
+
+    from benchmarks import bench_kernels as bk
+    t0 = time.perf_counter()
+    census = bk.tile_census_rows()
+    dt = (time.perf_counter() - t0) * 1e6
+    for r in census:
+        rows.append((f"tiles[{r['case']}]", dt / len(census),
+                     f"kept={r['flops_kept_frac']:.3f};"
+                     f"partial={r['partial']};empty={r['empty']}"))
+    for r in bk.kernel_timing_rows():
+        rows.append((f"kernel[{r['kernel']}]", r["us"], ""))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# total {time.perf_counter() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

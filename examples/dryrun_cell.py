@@ -1,0 +1,39 @@
+"""Dry-run a single (arch x shape x mesh) cell and print its roofline terms.
+
+This is the public API the EXPERIMENTS.md tables are built from.  Must be a
+fresh process (the 512-device flag is set before jax import).
+
+Run:  PYTHONPATH=src python examples/dryrun_cell.py --arch gemma3-4b \\
+          --shape decode_32k [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    if rec["status"] != "ok":
+        print(rec)
+        return
+    ro = rec["roofline"]
+    print(f"\n[example] {args.arch} x {args.shape} "
+          f"({'2x16x16' if args.multi_pod else '16x16'} mesh)")
+    print(f"  compute    {ro['compute_s']*1e3:9.2f} ms")
+    print(f"  memory     {ro['memory_s']*1e3:9.2f} ms")
+    print(f"  collective {ro['collective_s']*1e3:9.2f} ms")
+    print(f"  dominant:  {ro['dominant']}")
+    print(f"  collectives by kind: {ro['coll_by_kind']}")
+    print(f"  useful-FLOP fraction: {rec['useful_flop_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end training driver (brief deliverable b): train a ~100M-param
+llama-style model with the full production runtime — sharded params, the
+deterministic pipeline, async checkpoints, restart safety, straggler monitor.
+
+On this CPU container the default is a ~25M model for wall-clock sanity
+(--big selects the ~110M config; on TPU the same driver takes the full
+configs through launch/train.py).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 150] [--big]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.launch import train as T
+from repro.models import model_struct, param_count
+from repro.models.base import uniform_plan
+
+
+def lm_config(big: bool):
+    base = get_config("llama3.2-1b")
+    if big:     # ~110M params
+        return base.replace(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+            vocab_size=32000, layer_plan=uniform_plan("global", 12),
+        ).validate()
+    return base.replace(  # ~25M params
+        n_layers=6, d_model=384, n_heads=6, n_kv_heads=2, d_ff=1536,
+        vocab_size=8192, layer_plan=uniform_plan("global", 6),
+    ).validate()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm_config(args.big)
+    n = param_count(model_struct(cfg))
+    print(f"[example] model: {n/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    # monkeypatch the registry so the generic driver picks up our config
+    import repro.launch.train as TR
+    TR.get_config = lambda name, smoke=True: cfg
+    res = TR.train("custom-lm", smoke=True, steps=args.steps,
+                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=50, lr=3e-3, log_every=10)
+    first, last = res["losses"][0], res["losses"][-1]
+    print(f"[example] loss {first:.3f} -> {last:.3f} over {args.steps} steps")
+    assert last < first, "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+# The paper's primary contribution: Turing control-flow-instruction semantics
+# and the Hanoi control-flow-management mechanism, as executable JAX/numpy
+# models, plus the analysis stack around them (CFG/IPDom, trace diff, timing).
+from .isa import (CONTROL_OPS, Instr, MachineConfig, Op, decode_program,
+                  encode_program, hardware_cost_bytes)
+from .asm import AsmError, assemble, disassemble
+from .interp import (RunResult, popcount, run_hanoi, run_reference,
+                     run_simt_stack, simd_utilization)
+from .cfg import build_cfg, immediate_postdominators
+from .trace import discrepancy, levenshtein, trace_tokens
+from .structured import (If, Raw, Seq, While, compile_structured, emit_text,
+                         region_depth)
+
+__all__ = [
+    "AsmError", "CONTROL_OPS", "If", "Instr", "MachineConfig", "Op", "Raw",
+    "RunResult", "Seq", "While", "assemble", "build_cfg", "compile_structured",
+    "decode_program", "disassemble", "discrepancy", "emit_text",
+    "encode_program", "hardware_cost_bytes", "immediate_postdominators",
+    "levenshtein", "popcount", "region_depth", "run_hanoi", "run_reference",
+    "run_simt_stack", "simd_utilization", "trace_tokens",
+]

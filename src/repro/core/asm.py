@@ -1,0 +1,198 @@
+"""A tiny assembler for SASS-lite.
+
+Syntax follows the paper's rendering of Turing SASS (SS V-A):
+
+* ``@P0`` / ``@!P0`` guard prefix (first predicate);
+* an optional predicate *first operand* (``BRA P1, target`` /
+  ``@!P0 BREAK P1, B0``) as the second predicate — both AND together;
+* labels (``loop:``), ``;``/``#`` comments;
+* registers ``R0..``, predicate regs ``P0..``, convergence-barrier regs
+  ``B0..``;
+* memory operands ``[R2]`` / ``[R2+8]``;
+* ``ISETP.LT P0, R1, R2`` or immediate ``ISETP.GE P0, R1, 7``.
+
+Example (the paper's Fig 3 spinlock, see repro.core.programs)::
+
+    lock_loop:
+        ATOMCAS R2, [R0], R3, R4
+        ISETP.NE P0, R2, 0
+        @P0 BRA lock_loop
+    ...
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from .isa import CMP_NAMES, Instr, Op, encode_program
+
+_LABEL_RE = re.compile(r"^([A-Za-z_][\w.]*):$")
+_MEM_RE = re.compile(r"^\[R(\d+)(?:\s*\+\s*(-?\w+))?\]$")
+
+
+class AsmError(ValueError):
+    pass
+
+
+def _parse_pred(tok: str) -> int:
+    """``P3`` -> 4, ``!P3`` -> -4, per the isa.py predicate encoding."""
+    neg = tok.startswith("!")
+    if neg:
+        tok = tok[1:]
+    if not re.fullmatch(r"P\d+", tok):
+        raise AsmError(f"bad predicate {tok!r}")
+    return (-1 if neg else 1) * (int(tok[1:]) + 1)
+
+
+def _is_pred(tok: str) -> bool:
+    return bool(re.fullmatch(r"!?P\d+", tok))
+
+
+def _reg(tok: str, kind: str) -> int:
+    if not re.fullmatch(rf"{kind}\d+", tok):
+        raise AsmError(f"expected {kind}-register, got {tok!r}")
+    return int(tok[1:])
+
+
+def _int(tok: str) -> int:
+    return int(tok, 0)
+
+
+def assemble(text: str) -> np.ndarray:
+    """Assemble SASS-lite text into an ``int32[L, 8]`` program table."""
+    lines: list[tuple[str, list[str]]] = []   # (mnemonic, operand tokens)
+    guards: list[int] = []
+    labels: dict[str, int] = {}
+
+    for raw in text.splitlines():
+        line = raw.split(";")[0].split("#")[0].strip()
+        if not line:
+            continue
+        m = _LABEL_RE.match(line)
+        if m:
+            labels[m.group(1)] = len(lines)
+            continue
+        guard = 0
+        if line.startswith("@"):
+            gtok, line = line.split(None, 1)
+            guard = _parse_pred(gtok[1:])
+        parts = line.split(None, 1)
+        mnem = parts[0].upper()
+        ops = [t.strip() for t in parts[1].split(",")] if len(parts) > 1 else []
+        lines.append((mnem, ops))
+        guards.append(guard)
+
+    def res(tok: str, pc: int) -> int:
+        """Resolve a label or integer literal."""
+        if tok in labels:
+            return labels[tok]
+        try:
+            return _int(tok)
+        except ValueError:
+            raise AsmError(f"unknown label/literal {tok!r} at pc {pc}") from None
+
+    instrs: list[Instr] = []
+    for pc, ((mnem, ops), guard) in enumerate(zip(lines, guards)):
+        p2 = 0
+        # a leading predicate operand is the second predicate (SS V-A)
+        if ops and _is_pred(ops[0]) and not mnem.startswith("ISETP"):
+            p2 = _parse_pred(ops[0])
+            ops = ops[1:]
+
+        def mem(tok: str) -> tuple[int, int]:
+            m = _MEM_RE.match(tok.replace(" ", ""))
+            if not m:
+                raise AsmError(f"bad memory operand {tok!r} at pc {pc}")
+            return int(m.group(1)), (res(m.group(2), pc) if m.group(2) else 0)
+
+        k = dict(pred1=guard, pred2=p2)
+        if mnem == "NOP":
+            i = Instr(Op.NOP, **k)
+        elif mnem == "EXIT":
+            i = Instr(Op.EXIT, **k)
+        elif mnem == "BRA":
+            i = Instr(Op.BRA, imm=res(ops[0], pc), **k)
+        elif mnem == "BSSY":
+            i = Instr(Op.BSSY, dst=_reg(ops[0], "B"), imm=res(ops[1], pc), **k)
+        elif mnem == "BSYNC":
+            i = Instr(Op.BSYNC, dst=_reg(ops[0], "B"), **k)
+        elif mnem == "BMOV":
+            if ops[0].startswith("B"):
+                i = Instr(Op.BMOV_R2B, dst=_reg(ops[0], "B"),
+                          src0=_reg(ops[1], "R"), **k)
+            else:
+                i = Instr(Op.BMOV_B2R, dst=_reg(ops[0], "R"),
+                          src0=_reg(ops[1], "B"), **k)
+        elif mnem == "BREAK":
+            i = Instr(Op.BREAK, dst=_reg(ops[0], "B"), **k)
+        elif mnem == "WARPSYNC":
+            if ops[0].startswith("R"):
+                i = Instr(Op.WARPSYNC, src0=_reg(ops[0], "R"), **k)
+            else:
+                i = Instr(Op.WARPSYNC, src0=-1, imm=_int(ops[0]), **k)
+        elif mnem == "YIELD":
+            i = Instr(Op.YIELD, **k)
+        elif mnem == "CALL":
+            i = Instr(Op.CALL, imm=res(ops[0], pc), **k)
+        elif mnem == "RET":
+            i = Instr(Op.RET, src0=_reg(ops[0], "R"), **k)
+        elif mnem == "MOV":
+            i = Instr(Op.MOV, dst=_reg(ops[0], "R"), imm=res(ops[1], pc), **k)
+        elif mnem == "MOVR":
+            i = Instr(Op.MOVR, dst=_reg(ops[0], "R"), src0=_reg(ops[1], "R"), **k)
+        elif mnem in ("IADD", "IMUL", "AND", "OR", "XOR"):
+            i = Instr(Op[mnem], dst=_reg(ops[0], "R"), src0=_reg(ops[1], "R"),
+                      src1=_reg(ops[2], "R"), **k)
+        elif mnem == "IADDI":
+            i = Instr(Op.IADDI, dst=_reg(ops[0], "R"), src0=_reg(ops[1], "R"),
+                      imm=res(ops[2], pc), **k)
+        elif mnem in ("SHL", "SHR"):
+            i = Instr(Op[mnem], dst=_reg(ops[0], "R"), src0=_reg(ops[1], "R"),
+                      imm=_int(ops[2]), **k)
+        elif mnem.startswith("ISETP."):
+            cmp = CMP_NAMES[mnem.split(".")[1]]
+            if ops[2].startswith("R"):
+                i = Instr(Op.ISETP, dst=_parse_pred(ops[0]) - 1,
+                          src0=_reg(ops[1], "R"), src1=_reg(ops[2], "R"),
+                          src2=cmp, **k)
+            else:
+                i = Instr(Op.ISETP, dst=_parse_pred(ops[0]) - 1,
+                          src0=_reg(ops[1], "R"), src1=-1, src2=cmp,
+                          imm=res(ops[2], pc), **k)
+        elif mnem == "LANEID":
+            i = Instr(Op.LANEID, dst=_reg(ops[0], "R"), **k)
+        elif mnem == "LDG":
+            r, off = mem(ops[1])
+            i = Instr(Op.LDG, dst=_reg(ops[0], "R"), src0=r, imm=off, **k)
+        elif mnem == "STG":
+            r, off = mem(ops[0])
+            i = Instr(Op.STG, src0=r, src1=_reg(ops[1], "R"), imm=off, **k)
+        elif mnem in ("ATOMCAS", "ATOMEXCH", "ATOMADD"):
+            r, off = mem(ops[1])
+            src2 = _reg(ops[3], "R") if mnem == "ATOMCAS" else 0
+            i = Instr(Op[mnem], dst=_reg(ops[0], "R"), src0=r,
+                      src1=_reg(ops[2], "R"), src2=src2, imm=off, **k)
+        else:
+            raise AsmError(f"unknown mnemonic {mnem!r} at pc {pc}")
+        instrs.append(i)
+
+    return encode_program(instrs)
+
+
+def disassemble(table: np.ndarray) -> str:
+    """Best-effort inverse of :func:`assemble` (for debugging / logs)."""
+    out = []
+    for pc, row in enumerate(np.asarray(table)):
+        op = Op(int(row[0]))
+        fields = dict(zip(
+            ("op", "dst", "src0", "src1", "src2", "imm", "p1", "p2"),
+            map(int, row)))
+        g = ""
+        if fields["p1"]:
+            k = fields["p1"]
+            g = f"@{'!' if k < 0 else ''}P{abs(k) - 1} "
+        out.append(f"{pc:4d}: {g}{op.name} "
+                   + " ".join(f"{f}={v}" for f, v in fields.items()
+                              if f not in ("op", "p1") and v))
+    return "\n".join(out)

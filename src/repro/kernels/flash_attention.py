@@ -1,0 +1,169 @@
+"""Divergence-aware flash attention (Pallas TPU).
+
+This is the Hanoi insight at MXU-tile granularity (DESIGN.md SS2b).  The
+(q-block, kv-block) grid is an *active-mask* grid; each tile is classified at
+schedule time exactly like Hanoi classifies thread subsets:
+
+* EMPTY   — no (q, k) pair in the tile is live (outside the causal frontier
+            or past the sliding window): the path is never scheduled; the
+            tile's FLOPs are skipped entirely via ``pl.when`` (its WS-stack
+            entry is never pushed);
+* PARTIAL — the tile straddles the mask frontier: executed under a lane mask
+            (predicated execution);
+* FULL    — every pair is live: the reconverged fast path, no mask applied.
+
+One kernel serves full/causal attention, sliding windows (Mixtral), local
+windows (gemma3/recurrentgemma local layers) and right-padded KV tails.
+
+VMEM tiling: q tile (bq, hd), k/v tiles (bk, hd), f32 accumulators
+(bq, hd) + (bq,) m/l in scratch; the kv-block grid axis is innermost so the
+scratch carries the online-softmax state across kv tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _tile_class(qs, ks, bq, bk, *, causal: bool, window: int, kv_len: int):
+    """Classify tile [qs:qs+bq) x [ks:ks+bk).  Returns (empty, full) preds.
+
+    All inputs are traced scalars or python ints; pure arithmetic."""
+    q_min, q_max = qs, qs + bq - 1
+    k_min, k_max = ks, ks + bk - 1
+    empty = jnp.asarray(False)
+    full = jnp.asarray(True)
+    if causal:
+        empty |= k_min > q_max                     # entirely in the future
+        full &= k_max <= q_min                     # all pairs past-or-diag
+    if window > 0:
+        empty |= k_max < q_min - window + 1        # entirely older than window
+        full &= k_min >= q_max - window + 1        # all pairs inside window
+    # kv padding tail
+    empty |= k_min >= kv_len
+    full &= k_max < kv_len
+    return empty, full
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 bq: int, bk: int, causal: bool, window: int, kv_len: int,
+                 nk: int, sm_scale: float):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+    qs = iq * bq
+    ks = ik * bk
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    empty, full = _tile_class(qs, ks, bq, bk, causal=causal, window=window,
+                              kv_len=kv_len)
+
+    @pl.when(~empty)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s *= sm_scale
+
+        # PARTIAL tiles apply the lane mask; FULL tiles take the fast path.
+        qi = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = ks + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        live = jnp.ones((bq, bk), bool)
+        if causal:
+            live &= qi >= kj
+        if window > 0:
+            live &= qi - kj < window
+        live &= kj < kv_len
+        s = jnp.where(full | live, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         kv_len: int | None = None, bq: int = DEFAULT_BQ,
+                         bk: int = DEFAULT_BK, interpret: bool = False):
+    """q: [B, H, Sq, hd]; k, v: [B, K, Sk, hd] (already GQA-expanded or K==H).
+
+    Sq/Sk are padded to block multiples by the caller (ops.py)."""
+    B, H, Sq, hd = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    assert H == K, "ops.py expands GQA before calling the kernel"
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    kv_len = Sk if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, causal=causal, window=int(window),
+        kv_len=int(kv_len), nk=nk, sm_scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m
+            pltpu.VMEM((bq,), jnp.float32),      # l
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def tile_stats(Sq: int, Sk: int, *, causal: bool, window: int,
+               kv_len: int | None = None, bq: int = DEFAULT_BQ,
+               bk: int = DEFAULT_BK) -> dict:
+    """Schedule-time tile census — the 'SIMD utilization' of the mask grid.
+
+    Used by benchmarks to report how much work the EMPTY-tile skipping saves
+    (the Hanoi path-never-scheduled analogue)."""
+    kv_len = Sk if kv_len is None else kv_len
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    empty = full = partial = 0
+    for i in range(nq):
+        for j in range(nk):
+            e, f = _tile_class(i * bq, j * bk, bq, bk, causal=causal,
+                               window=window, kv_len=kv_len)
+            if bool(e):
+                empty += 1
+            elif bool(f):
+                full += 1
+            else:
+                partial += 1
+    total = nq * nk
+    return {"total": total, "empty": empty, "full": full, "partial": partial,
+            "flops_kept_frac": (full + partial) / total,
+            "mask_overhead_frac": partial / max(1, full + partial)}

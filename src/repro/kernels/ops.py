@@ -1,0 +1,91 @@
+"""JIT-ready wrappers around the Pallas kernels.
+
+Handle layout (BSHD <-> BHSD), GQA expansion, block padding and the
+interpret-mode fallback (this container is CPU-only: TPU is the TARGET,
+``interpret=True`` executes the kernel body for validation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _rw
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, mult: int, axis: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = _fa.DEFAULT_BQ, bk: int = _fa.DEFAULT_BK,
+                    interpret: bool | None = None):
+    """q: [B, S, H, hd]; k, v: [B, S, K, hd] (GQA).  Returns [B, S, H, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    # layout: BSHD -> BHSD; expand GQA kv heads
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.repeat(jnp.moveaxis(k, 1, 2), G, axis=1)
+    vt = jnp.repeat(jnp.moveaxis(v, 1, 2), G, axis=1)
+    bq = min(bq, max(8, Sq))
+    bk = min(bk, max(8, Sk))
+    qt = _pad_to(qt, bq, 2)
+    kt = _pad_to(kt, bk, 2)
+    vt = _pad_to(vt, bk, 2)
+    out = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                   kv_len=Sk, bq=bq, bk=bk,
+                                   interpret=interpret)
+    return jnp.moveaxis(out[:, :, :Sq], 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw", "interpret"))
+def rglru_scan(a, b, *, bs: int = _rg.DEFAULT_BS, bw: int = _rg.DEFAULT_BW,
+               interpret: bool | None = None):
+    """a, b: [B, S, W] f32 recurrence coefficients -> h [B, S, W] f32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, W = a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    ap = _pad_to(_pad_to(a, bs, 1), bw, 2)
+    bp = _pad_to(_pad_to(b, bs, 1), bw, 2)
+    h = _rg.rglru_scan_pallas(ap, bp, bs=bs, bw=bw, interpret=interpret)
+    return h[:, :S, :W]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, bs: int = _rw.DEFAULT_BS,
+               interpret: bool | None = None):
+    """r,k,v,w: [B, S, H, hd] f32; u: [H, hd].  Returns (out, s_last) with
+    out [B, S, H, hd], s_last [B, H, hd, hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, H, hd = r.shape
+    bs = min(bs, S)
+    rt, kt, vt, wt = (jnp.moveaxis(_pad_to(t, bs, 1), 1, 2)
+                      for t in (r, k, v, w))
+    # padded tail: w=1, k=0 keeps the state unchanged
+    if S % bs:
+        pad = (-S) % bs
+        wt = wt.at[:, :, S:, :].set(1.0)
+        kt = kt.at[:, :, S:, :].set(0.0)
+    out, s_last = _rw.rwkv6_scan_pallas(rt, kt, vt, wt, u, bs=bs,
+                                        interpret=interpret)
+    return jnp.moveaxis(out, 2, 1)[:, :S], s_last

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel ref.py the brief
+requires).  Tests sweep shapes/dtypes and assert_allclose kernels vs these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  kv_len: int | None = None):
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, K, hd] (GQA: H % K == 0).
+
+    window <= 0 means unlimited; kv_len masks trailing kv padding.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf) * (hd ** -0.5)
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window and window > 0:
+        mask &= qi - kj < window
+    if kv_len is not None:
+        mask &= kj < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t, h_0 = b_0.  a, b: [B, S, W] float32."""
+    def bin_op(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(bin_op, (a, b), axis=1)
+    return h
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """RWKV-6 wkv recurrence.
+
+    r,k,v,w: [B, S, H, hd] float32; u: [H, hd].
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (out [B,S,H,hd], s_last [B,H,hd,hd]).
+    """
+    B, S, H, hd = r.shape
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        at = kt[..., :, None] * vt[..., None, :]
+        out_t = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * at)
+        s = wt[..., :, None] * s + at
+        return s, out_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 1), s_last

@@ -1,0 +1,65 @@
+"""RG-LRU linear-recurrence kernel (Pallas TPU).
+
+h_t = a_t * h_{t-1} + b_t over [B, S, W].  Tiling: the W (channel) axis is
+split into lane-aligned tiles, the S axis into VMEM-sized chunks walked
+sequentially (innermost grid axis) with the carry h kept in VMEM scratch —
+the HBM traffic is exactly one read of (a, b) and one write of h, which is
+the memory-bound roofline for this op.  Within a chunk the recurrence is a
+short unrolled chain of VPU fmas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 256     # time-steps per chunk
+DEFAULT_BW = 512     # channels per tile
+
+
+def _rglru_kernel(a_ref, b_ref, h_ref, carry_ref, *, bs: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    h = carry_ref[...]                       # [bw]
+    a = a_ref[0]                             # [bs, bw]
+    b = b_ref[0]
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t] * h + b[t]
+        out = out.at[t].set(h)
+        return h, out
+
+    h, out = jax.lax.fori_loop(0, bs, step,
+                               (h, jnp.zeros_like(a)))
+    h_ref[0] = out
+    carry_ref[...] = h
+
+
+def rglru_scan_pallas(a, b, *, bs: int = DEFAULT_BS, bw: int = DEFAULT_BW,
+                      interpret: bool = False):
+    """a, b: [B, S, W] float32 -> h [B, S, W] float32."""
+    B, S, W = a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    assert S % bs == 0 and W % bw == 0, (S, W, bs, bw)
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, W // bw, S // bs),          # S innermost: carry in scratch
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, ti: (bi, ti, wi)),
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, ti: (bi, ti, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wi, ti: (bi, ti, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

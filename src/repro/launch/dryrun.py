@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run (brief deliverable e).
+
+For every (architecture x input shape) run-cell, lower + compile the step
+against the production meshes:
+
+* single-pod  (16, 16)      ("data", "model")   — roofline source
+* multi-pod   (2, 16, 16)   ("pod", "data", "model") — proves the pod axis
+
+and record memory_analysis() (proves fit), cost_analysis() (FLOPs/bytes) and
+the collective schedule (parsed from optimized HLO) into a JSON that
+EXPERIMENTS.md SS Dry-run / SS Roofline read.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only | --single-only]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             verbose: bool = True, **cell_kw) -> dict:
+    import jax
+    from repro.configs import SHAPES, cell_status, get_config
+    from repro.launch.hlo_analysis import analyze_compiled, model_flops
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, lower_cell
+
+    ok, why = cell_status(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # auto-fit: training cells that exceed the HBM budget retry with more
+    # gradient-accumulation microbatches (the fit proof the brief requires)
+    HBM_BUDGET = 14 * 2 ** 30
+    mb = cell_kw.pop("microbatches", 1)
+    is_train = SHAPES[shape_name].kind == "train"
+    while True:
+        kw = dict(cell_kw, microbatches=mb) if is_train else dict(cell_kw)
+        cell = build_cell(arch, shape_name, mesh, **kw)
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        temp = compiled.memory_analysis().temp_size_in_bytes
+        if not is_train or temp <= HBM_BUDGET or mb >= 16:
+            break
+        print(f"[dryrun] {arch} x {shape_name}: temp "
+              f"{temp/2**30:.1f} GiB > budget, retry microbatches={mb*2}",
+              flush=True)
+        mb *= 2
+        import jax as _jax
+        _jax.clear_caches()
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    roof = analyze_compiled(compiled)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mf = model_flops(cfg, shape, backward=(shape.kind == "train"))
+    n_dev = 1024 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "microbatches": mb if is_train else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "roofline": roof.to_dict(),
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "useful_flop_frac": (mf / n_dev) / max(roof.flops, 1.0),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}: "
+              f"compile {t_compile:.0f}s, "
+              f"temp {mem_d['temp_bytes']/2**30:.2f} GiB, "
+              f"args {mem_d['argument_bytes']/2**30:.2f} GiB, "
+              f"dominant {roof.dominant}, "
+              f"terms c/m/x = {roof.compute_s*1e3:.1f}/"
+              f"{roof.memory_s*1e3:.1f}/{roof.collective_s*1e3:.1f} ms",
+              flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--single-only", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--remat", default="dots")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES, SHAPES, cell_status
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_NAMES for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.single_only:
+        meshes.append(True)
+
+    import os as _os
+    _os.makedirs(_os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if _os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    def key(r):
+        return (r["arch"], r["shape"], r["mesh"])
+
+    done = {key(r) for r in results if r.get("status") in ("ok", "skipped")}
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            k = (arch, shape, "multi" if mp else "single")
+            if k in done:
+                continue
+            try:
+                kw = {}
+                from repro.configs import SHAPES as _S
+                if _S[shape].kind == "train":
+                    kw["remat"] = args.remat
+                rec = run_cell(arch, shape, mp, **kw)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            results = [r for r in results if key(r) != k] + [rec]
+            json.dump(results, open(args.out, "w"), indent=1)
+            import jax
+            jax.clear_caches()
+    print(f"[dryrun] wrote {args.out}; {failures} failures")
+
+
+if __name__ == "__main__":
+    main()

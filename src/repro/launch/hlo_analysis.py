@@ -1,0 +1,177 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e target).
+
+cost_analysis() gives HLO FLOPs and bytes for the per-device SPMD module;
+collective bytes are NOT in cost_analysis, so we parse the optimized HLO text
+and sum operand/result sizes of every collective op (per the brief).
+
+Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective bytes from optimized HLO text.
+
+    For each collective instruction we take max(result bytes, sum of operand
+    bytes) as the data moved; all-reduce counts twice (reduce-scatter +
+    all-gather phases of a ring).  HLO shapes post-SPMD are per-device.
+    """
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", s)
+        if not m:
+            continue
+        body = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", body):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", body):
+            continue                       # counted at -start
+        shapes = _SHAPE_RE.findall(body)
+        if not shapes:
+            continue
+        # result shape(s) appear before the op name; operands inside parens
+        op_pos = body.find(kind)
+        result_b = sum(_shape_bytes(d, dims)
+                       for d, dims in _SHAPE_RE.findall(body[:op_pos]))
+        operand_b = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(body[op_pos:]))
+        moved = max(result_b, operand_b)
+        if kind == "all-reduce":
+            moved *= 2
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + moved
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+@dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device HLO bytes accessed
+    coll_bytes: float          # per-device collective bytes
+    collectives: CollectiveStats | None = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "coll_by_kind": dict(self.collectives.bytes_by_kind)
+            if self.collectives else {},
+        }
+
+
+def analyze_compiled(compiled, lowered_text: str | None = None) -> Roofline:
+    """Trip-count-aware roofline terms (see hlo_static for why
+    cost_analysis() alone is insufficient: while bodies count once).
+
+    * flops: static dot accounting with trip counts (validated vs 6ND);
+    * hbm:   cost_analysis bytes scaled by the static loop-correction ratio
+             (static fusion-boundary traffic with trips / without);
+    * collectives: static per-kind bytes with trip counts.
+    """
+    from .hlo_static import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    st_trips = analyze_hlo(text)
+    st_unit = analyze_hlo(text, unit_trips=True)
+    scale = max(1.0, st_trips.hbm_bytes / max(st_unit.hbm_bytes, 1.0))
+    cs = CollectiveStats(bytes_by_kind=dict(st_trips.coll_bytes_by_kind),
+                         count_by_kind=dict(st_trips.coll_count_by_kind))
+    return Roofline(flops=st_trips.flops, hbm_bytes=bytes_acc * scale,
+                    coll_bytes=st_trips.coll_bytes, collectives=cs)
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) 'useful' flops for the cell."""
+    from repro.models import model_struct, param_count
+    from repro.models.base import P
+    import jax
+    n = 0
+    struct = model_struct(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        struct, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, leaf in leaves:
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        keys = "/".join(getattr(k, "key", str(k)) for k in path)
+        if cfg.n_experts and ("w_gate" in keys or "w_up" in keys
+                              or "w_down" in keys) and "shared" not in keys \
+                and "segments" in keys and size >= cfg.n_experts:
+            # routed expert weights: only top-k/E of them are active
+            size = size * cfg.experts_per_token // cfg.n_experts
+        n += size
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if backward else 2
+    return float(mult) * n * tokens

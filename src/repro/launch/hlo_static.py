@@ -1,0 +1,248 @@
+"""Trip-count-aware static analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any model
+with scanned layers (all of ours) under-reports FLOPs/bytes by the trip
+count; the same bias hits collective bytes for collectives inside the layer
+scan (sequence-parallel all-gathers).  This module parses the post-SPMD HLO
+text, builds the computation call graph with multipliers (while trip counts
+from ``known_trip_count``) and produces trip-aware totals:
+
+* flops:       2*M*N*K per dot (MXU work — elementwise is negligible);
+* hbm bytes:   fusion-boundary traffic (result + operands of top-level
+               instructions; fusion-internal computations touch VMEM only);
+* collectives: per-kind bytes and counts for all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute.
+
+Shapes in post-SPMD HLO are per-device, so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DT = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s*->")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT.get(dt, 4)
+    return total
+
+
+def _type_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operands + attributes
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)     # name -> type str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)     # instr name -> type str
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+"
+                                  r"\[[0-9,]*\](?:\{[^}]*\})?))", hdr.group(2)):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        if opcode == "parameter":       # e.g. %p = f32[..] parameter(0)
+            cur.params[name] = type_str
+        ins = Instr(name, type_str, opcode, rest)
+        cur.instrs.append(ins)
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _called_comps(ins: Instr) -> list[tuple[str, str]]:
+    """(role, computation) pairs referenced by this instruction."""
+    out = []
+    for key in ("body", "condition", "to_apply", "calls"):
+        for m in re.finditer(rf"{key}=%?([\w.\-]+)", ins.rest):
+            out.append((key, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+    if m:
+        for c in m.group(1).split(","):
+            out.append(("branch", c.strip().lstrip("%")))
+    return out
+
+
+def _trip_count(ins: Instr) -> int:
+    m = re.search(r'known_trip_count[^0-9]*"?(\d+)"?', ins.rest)
+    if m:
+        return int(m.group(1))
+    m = re.search(r'trip_count[^0-9]*(\d+)', ins.rest)
+    return int(m.group(1)) if m else 1
+
+
+def _multipliers(comps: dict[str, Computation], *,
+                 unit_trips: bool = False) -> tuple[dict, set]:
+    """Computation -> execution count; plus the set of fusion-called comps
+    (whose traffic is VMEM-internal)."""
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or entry is None:
+            pass
+    # ENTRY is the computation whose name is not referenced by any other
+    referenced = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for _, callee in _called_comps(ins):
+                referenced.add(callee)
+    entries = [n for n in comps if n not in referenced]
+    mult = {n: 0 for n in comps}
+    fusion_called: set[str] = set()
+    stack = [(e, 1) for e in entries]
+    seen_depth = 0
+    while stack:
+        name, k = stack.pop()
+        if name not in comps or k == 0:
+            continue
+        mult[name] = mult.get(name, 0) + k
+        comp = comps[name]
+        for ins in comp.instrs:
+            calls = _called_comps(ins)
+            if not calls:
+                continue
+            trip = (_trip_count(ins)
+                    if ins.opcode == "while" and not unit_trips else 1)
+            for role, callee in calls:
+                if callee not in comps:
+                    continue
+                kk = k * (trip if role in ("body", "condition") else 1)
+                if role == "calls":
+                    fusion_called.add(callee)
+                stack.append((callee, kk))
+                seen_depth += 1
+                if seen_depth > 200_000:
+                    raise RuntimeError("call graph runaway")
+    return mult, fusion_called
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "copy-start", "copy-done", "after-all",
+                 "partition-id", "replica-id", "iota"}
+
+
+@dataclass
+class StaticCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes_by_kind: dict = field(default_factory=dict)
+    coll_count_by_kind: dict = field(default_factory=dict)
+    dot_flops_by_comp: dict = field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_kind.values()))
+
+
+def analyze_hlo(text: str, *, unit_trips: bool = False) -> StaticCost:
+    """unit_trips=True pretends every while runs once — matching
+    cost_analysis()'s accounting, used to derive the loop-correction ratio."""
+    comps = parse_module(text)
+    mult, fusion_called = _multipliers(comps, unit_trips=unit_trips)
+    out = StaticCost()
+
+    for comp in comps.values():
+        k = mult.get(comp.name, 0)
+        if k == 0:
+            continue
+        for ins in comp.instrs:
+            # ---- flops: dots anywhere (incl. inside fusions) -------------
+            if ins.opcode == "dot":
+                res_elems = 1
+                for d in _type_dims(ins.type_str):
+                    res_elems *= d
+                ops = re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0])
+                kdim = 1
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+                if m and ops:
+                    lhs_type = comp.shapes.get(ops[0], "")
+                    dims = _type_dims(lhs_type)
+                    for ci in m.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            kdim *= dims[int(ci)]
+                f = 2.0 * res_elems * kdim
+                out.flops += k * f
+                out.dot_flops_by_comp[comp.name] = \
+                    out.dot_flops_by_comp.get(comp.name, 0.0) + k * f
+            # ---- collectives --------------------------------------------
+            for ckind in COLLECTIVES:
+                if ins.opcode in (ckind, f"{ckind}-start"):
+                    res_b = _type_bytes(ins.type_str)
+                    opnames = re.findall(r"%([\w.\-]+)",
+                                         ins.rest.split("),")[0])
+                    op_b = sum(_type_bytes(comp.shapes.get(o, ""))
+                               for o in opnames)
+                    moved = max(res_b, op_b)
+                    if ckind == "all-reduce":
+                        moved *= 2
+                    out.coll_bytes_by_kind[ckind] = \
+                        out.coll_bytes_by_kind.get(ckind, 0) + k * moved
+                    out.coll_count_by_kind[ckind] = \
+                        out.coll_count_by_kind.get(ckind, 0) + k
+                    break
+            # ---- hbm traffic at fusion boundaries ------------------------
+            if comp.name in fusion_called:
+                continue
+            if ins.opcode in _SKIP_TRAFFIC or ins.opcode.endswith("-done"):
+                continue
+            res_b = _type_bytes(ins.type_str)
+            opnames = re.findall(r"%([\w.\-]+)", ins.rest)
+            op_b = 0
+            for o in opnames:
+                t = comp.shapes.get(o)
+                if t:
+                    op_b += _type_bytes(t)
+            out.hbm_bytes += k * (res_b + op_b)
+    return out

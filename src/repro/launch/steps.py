@@ -1,0 +1,310 @@
+"""Cell builders: (arch x shape x mesh) -> jittable step fn + abstract args +
+shardings.  Used by the dry-run, the roofline harness and the real drivers.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, Shape, get_config
+from repro.models import (abstract_params, cache_struct, decode_step, forward,
+                          loss_fn, model_struct)
+from repro.models.base import ModelConfig, P, abstract_params as abstract
+from repro.optim import AdamWConfig, adamw_init_struct, adamw_update
+from repro.sharding import batch_pspec, cache_pspecs, param_pspecs
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# input specs (brief: ShapeDtypeStruct stand-ins for every model input)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend == "audio_stub":
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), f32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.frontend == "vision_stub":
+        n_txt = S - cfg.n_patches
+        return {"tokens": jax.ShapeDtypeStruct((B, n_txt), i32),
+                "patches": jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.frontend_dim), f32),
+                "labels": jax.ShapeDtypeStruct((B, n_txt), i32),
+                "loss_mask": jax.ShapeDtypeStruct((B, n_txt), f32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), f32)}
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable           # jittable
+    args: tuple            # abstract (ShapeDtypeStruct) args
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _auto_score_shard(cfg: ModelConfig, mesh: Mesh) -> str:
+    tp = mesh.shape.get("model", 1)
+    return "heads" if cfg.n_heads % tp == 0 else "qseq"
+
+
+def _auto_kv_shard(cfg: ModelConfig, mesh: Mesh) -> str:
+    tp = mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % tp == 0:
+        return "heads"
+    if cfg.hd % tp == 0:
+        return "hd"
+    return "none"
+
+
+def _mesh_batch_axes(mesh: Mesh, batch: int) -> tuple:
+    from repro.sharding import data_axes
+    dax = data_axes(mesh)
+    n = 1
+    for a in dax:
+        n *= mesh.shape[a]
+    return tuple(dax) if (dax and batch % n == 0) else ()
+
+
+def train_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               remat: str = "full", fsdp: bool = True,
+               rule_overrides: dict | None = None,
+               score_shard: str | None = None,
+               microbatches: int = 1,
+               attn_dtype: str = "bf16",
+               attn_impl: str | None = None,
+               rwkv_unroll: int = 1,
+               rwkv_impl: str = "scan",
+               tp_impl: str = "gspmd",
+               param_mode: str = "fsdp",
+               opt: AdamWConfig = AdamWConfig()) -> Cell:
+    """param_mode:
+    * "fsdp"  — f32 params FSDP x TP sharded; weights are all-gathered on
+      every use (and re-gathered each microbatch under accumulation);
+    * "zero1" — bf16 compute params TP-sharded but REPLICATED across data;
+      f32 master + moments stay FSDP x TP sharded in the optimizer state.
+      Forward/backward do zero weight collectives; one reduce-scatter of the
+      accumulated grads + one all-gather of updated bf16 params per step.
+    """
+    cfg = get_config(arch).replace(remat=remat)
+    shape = SHAPES[shape_name]
+    cfg = cfg.replace(
+        score_shard=score_shard if score_shard is not None
+        else _auto_score_shard(cfg, mesh),
+        batch_axes=_mesh_batch_axes(mesh, shape.global_batch),
+        act_shard="seq", attn_dtype=attn_dtype,
+        kv_shard=_auto_kv_shard(cfg, mesh), rwkv_unroll=rwkv_unroll,
+        rwkv_impl=rwkv_impl, tp_impl=tp_impl)
+    if attn_impl is not None:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    struct = model_struct(cfg)
+    fsdp_spec = param_pspecs(struct, cfg, mesh, fsdp=True,
+                             overrides=rule_overrides)
+    tp_spec = param_pspecs(struct, cfg, mesh, fsdp=False,
+                           overrides=rule_overrides)
+    pspec = fsdp_spec if (fsdp and param_mode == "fsdp") else (
+        tp_spec if param_mode == "zero1" else
+        param_pspecs(struct, cfg, mesh, fsdp=fsdp,
+                     overrides=rule_overrides))
+    ostruct = adamw_init_struct(struct)
+    if param_mode == "zero1":
+        opt_spec = {"m": fsdp_spec, "v": fsdp_spec,
+                    "master": fsdp_spec, "step": PartitionSpec()}
+        ostruct = dict(ostruct, master=jax.tree_util.tree_map(
+            lambda p: P(p.shape, p.axes, init=p.init, dtype=p.dtype),
+            struct, is_leaf=lambda x: isinstance(x, P)))
+    else:
+        opt_spec = {"m": pspec, "v": pspec, "step": PartitionSpec()}
+    bspec_all = batch_pspec(cfg, mesh, shape.global_batch)
+    ins = input_specs(cfg, shape)
+    bspec = {k: bspec_all[k] for k in ins}
+
+    def grad_one(params, mb):
+        def lossf(p):
+            if param_mode == "zero1":       # params already bf16
+                return loss_fn(p, cfg, mb)
+            return loss_fn(cast_tree(p, jnp.bfloat16), cfg, mb)
+        return jax.value_and_grad(lossf, has_aux=True)(params)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_one(params, batch)
+            return loss, metrics, grads
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch)
+
+        def acc_body(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = grad_one(params, mb)
+            gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+            return (gsum, lsum + loss), ()
+
+        gdt = jnp.bfloat16 if param_mode == "zero1" else jnp.float32
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, gdt), params)
+        (grads, loss), _ = jax.lax.scan(
+            acc_body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        loss = loss / microbatches
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}, grads
+
+    def step_fsdp(params, opt_state, batch):
+        loss, metrics, grads = accumulate(params, batch)
+        new_p, new_o, gnorm = adamw_update(params, grads, opt_state, opt)
+        return new_p, new_o, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    def step_zero1(params, opt_state, batch):
+        loss, metrics, grads = accumulate(params, batch)
+        # ONE reduce-scatter: push the (data-replicated) grads into the
+        # FSDP layout of the master shards.  Constrain BEFORE the f32 cast:
+        # the wire moves bf16 and no full-size f32 grad is ever materialized
+        grads = jax.tree_util.tree_map(
+            lambda g, sp: jax.lax.with_sharding_constraint(g, sp)
+            .astype(jnp.float32),
+            grads, fsdp_spec)
+        master = opt_state["master"]
+        mstate = {"m": opt_state["m"], "v": opt_state["v"],
+                  "step": opt_state["step"]}
+        new_master, new_mstate, gnorm = adamw_update(master, grads, mstate,
+                                                     opt)
+        # ONE all-gather: updated bf16 compute params back to TP-only layout
+        new_p = jax.tree_util.tree_map(
+            lambda w, sp: jax.lax.with_sharding_constraint(
+                w.astype(jnp.bfloat16), sp),
+            new_master, tp_spec)
+        new_o = dict(new_mstate, master=new_master)
+        return new_p, new_o, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    if param_mode == "zero1":
+        args = (abstract(struct, jnp.bfloat16), abstract(ostruct), ins)
+        return Cell(name=f"{arch}:{shape_name}", fn=step_zero1, args=args,
+                    in_shardings=(pspec, opt_spec, bspec),
+                    out_shardings=(pspec, opt_spec, None),
+                    donate_argnums=(0, 1))
+    args = (abstract(struct), abstract(ostruct), ins)
+    return Cell(
+        name=f"{arch}:{shape_name}",
+        fn=step_fsdp, args=args,
+        in_shardings=(pspec, opt_spec, bspec),
+        out_shardings=(pspec, opt_spec, None),
+        donate_argnums=(0, 1))
+
+
+def prefill_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                 fsdp: bool = True,
+                 rule_overrides: dict | None = None,
+                 score_shard: str | None = None,
+                 attn_impl: str | None = None,
+                 rwkv_unroll: int = 1,
+                 rwkv_impl: str = "scan") -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = cfg.replace(
+        score_shard=score_shard if score_shard is not None
+        else _auto_score_shard(cfg, mesh),
+        batch_axes=_mesh_batch_axes(mesh, shape.global_batch),
+        act_shard="seq", attn_dtype="bf16",
+        kv_shard=_auto_kv_shard(cfg, mesh), rwkv_unroll=rwkv_unroll,
+        rwkv_impl=rwkv_impl)
+    if attn_impl is not None:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    struct = model_struct(cfg)
+    pspec = param_pspecs(struct, cfg, mesh, fsdp=fsdp,
+                         overrides=rule_overrides)
+    ins = input_specs(cfg, shape)
+    bspec_all = batch_pspec(cfg, mesh, shape.global_batch)
+    bspec = {k: bspec_all[k] for k in ins}
+
+    def step(params, batch):
+        # encoders have no decode step: their "prefill" is feature extraction
+        logits, aux, caches = forward(params, cfg, batch,
+                                      return_cache=cfg.is_decoder)
+        return logits, caches
+
+    args = (abstract(struct, jnp.bfloat16), ins)
+    return Cell(
+        name=f"{arch}:{shape_name}",
+        fn=step, args=args,
+        in_shardings=(pspec, bspec),
+        out_shardings=None)
+
+
+def decode_cell(arch: str, shape_name: str, mesh: Mesh, *,
+                fsdp: bool = True,
+                rule_overrides: dict | None = None,
+                cache_overrides: dict | None = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B = shape.global_batch
+    cfg = cfg.replace(batch_axes=_mesh_batch_axes(mesh, B))
+    struct = model_struct(cfg)
+    pspec = param_pspecs(struct, cfg, mesh, fsdp=fsdp,
+                         overrides=rule_overrides)
+    cstruct = cache_struct(cfg, B, shape.seq_len)
+    cspec = cache_pspecs(cstruct, cfg, mesh, B, overrides=cache_overrides)
+    ins = input_specs(cfg, shape)
+
+    def step(params, caches, tokens, pos):
+        return decode_step(params, cfg, caches, tokens, pos)
+
+    args = (abstract(struct, jnp.bfloat16),
+            [abstract(cs, jnp.bfloat16) for cs in cstruct],
+            ins["tokens"],
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return Cell(
+        name=f"{arch}:{shape_name}",
+        fn=step, args=args,
+        in_shardings=(pspec, cspec, PartitionSpec(), PartitionSpec()),
+        out_shardings=(None, cspec),
+        donate_argnums=(1,))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, **kw) -> Cell:
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return train_cell(arch, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return prefill_cell(arch, shape_name, mesh, **kw)
+    return decode_cell(arch, shape_name, mesh, **kw)
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """lower() under the mesh; returns the Lowered object."""
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+            else s, cell.in_shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec)),
+        out_shardings=cell.out_shardings if cell.out_shardings is None else
+        jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+            else s, cell.out_shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec)),
+        donate_argnums=cell.donate_argnums)
+    try:
+        ctx = jax.set_mesh(mesh)      # needed by shard_map's ambient lookup
+    except Exception:
+        ctx = mesh
+    with ctx:
+        return jitted.lower(*cell.args)

@@ -1,0 +1,12 @@
+from .base import (GLOBAL, LOCAL, RECURRENT, RWKV, SWA, ModelConfig, P,
+                   abstract_params, cycle_plan, init_params, param_count,
+                   partition_specs, uniform_plan)
+from .transformer import (cache_struct, decode_step, forward, loss_fn,
+                          model_struct)
+
+__all__ = [
+    "GLOBAL", "LOCAL", "RECURRENT", "RWKV", "SWA", "ModelConfig", "P",
+    "abstract_params", "cache_struct", "cycle_plan", "decode_step", "forward",
+    "init_params", "loss_fn", "model_struct", "param_count",
+    "partition_specs", "uniform_plan",
+]

@@ -1,0 +1,220 @@
+"""Model substrate: configs and structure-trees.
+
+Every parameter is declared once as a :class:`P` leaf carrying its shape,
+LOGICAL axis names and initializer.  From the same declaration we derive:
+
+* materialized random params (smoke tests, examples, real training),
+* ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod dry-run never allocates),
+* ``PartitionSpec`` trees via logical-axis -> mesh-axis rules (the MaxText
+  idiom), which is what the SS Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+# ---------------------------------------------------------------------------
+# parameter structure leaves
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class P:
+    """A parameter declaration: shape + logical axes + init."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float | None = None    # std override for normal
+    dtype: str | None = None      # override (default: model param dtype)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaves(struct) -> list[tuple[tuple, P]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        struct, is_leaf=lambda x: isinstance(x, P))
+    return flat
+
+
+def init_params(struct, key: jax.Array, dtype=jnp.float32):
+    """Materialize a random param tree from a structure tree."""
+    flat = _leaves(struct)
+    keys = jax.random.split(key, len(flat))
+
+    def make(leaf: P, k):
+        dt = jnp.dtype(leaf.dtype) if leaf.dtype else dtype
+        if leaf.init == "zeros":
+            return jnp.zeros(leaf.shape, dt)
+        if leaf.init == "ones":
+            return jnp.ones(leaf.shape, dt)
+        std = leaf.scale
+        if std is None:
+            fan_in = leaf.shape[0] if leaf.shape else 1
+            std = 0.02 if len(leaf.shape) < 2 else min(0.02, fan_in ** -0.5)
+        return (jax.random.normal(k, leaf.shape) * std).astype(dt)
+
+    made = {path: make(leaf, k) for (path, leaf), k in zip(flat, keys)}
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: made[path], struct,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(struct, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    def mk(leaf: P):
+        dt = jnp.dtype(leaf.dtype) if leaf.dtype else dtype
+        return jax.ShapeDtypeStruct(leaf.shape, dt)
+    return jax.tree_util.tree_map(mk, struct,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def partition_specs(struct, rules: dict[str, Any]):
+    """Logical-axis -> mesh-axis mapping, e.g. {"mlp": "model",
+    "embed": "data", "vocab": "model"}.  Unknown axes are replicated.
+    A mesh axis may appear at most once per spec; later repeats replicate."""
+    def mk(leaf: P):
+        used: set = set()
+        spec = []
+        for ax in leaf.axes:
+            m = rules.get(ax)
+            flat = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            if m is None or any(f in used for f in flat if f):
+                spec.append(None)
+            else:
+                used.update(f for f in flat if f)
+                spec.append(m if not isinstance(m, list) else tuple(m))
+        return PartitionSpec(*spec)
+    return jax.tree_util.tree_map(mk, struct,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_zeros_like_specs(struct, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.zeros(leaf.shape,
+                               jnp.dtype(leaf.dtype) if leaf.dtype else dtype),
+        struct, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(struct) -> int:
+    return sum(int(np.prod(leaf.shape)) for _, leaf in _leaves(struct))
+
+
+# ---------------------------------------------------------------------------
+# model configuration
+# ---------------------------------------------------------------------------
+
+# layer kinds used in layer plans
+GLOBAL, LOCAL, SWA, RECURRENT, RWKV = "global", "local", "swa", "recurrent", "rwkv"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | rwkv | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    # layer plan: list of (pattern, repeats); sum(len(p)*r) == n_layers
+    layer_plan: tuple[tuple[tuple[str, ...], int], ...] = (((GLOBAL,), 0),)
+    window_size: int = 0          # for local/swa layers
+    causal: bool = True
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # modality frontend stub
+    frontend: str = "token"       # token | audio_stub | vision_stub
+    frontend_dim: int = 0
+    n_patches: int = 0
+    # recurrent widths
+    lru_width: int = 0
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+    # misc
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # runtime knobs (overridable per cell by the perf loop)
+    attn_impl: str = "reference"  # reference | flash
+    score_shard: str = "none"     # none | heads | qseq (context-parallel)
+    act_shard: str = "dp"         # dp (batch only) | seq (Megatron-SP:
+                                  # residual stream sequence-sharded on model)
+    attn_dtype: str = "f32"       # f32 | bf16 score/prob materialization
+    kv_shard: str = "none"        # none | heads | hd (KV cache TP axis)
+    rwkv_unroll: int = 1          # tokens per scan body (state HBM
+                                  # round-trips / unroll; Pallas kernel
+                                  # equivalent on the dry-run path)
+    tp_impl: str = "gspmd"        # gspmd | shard_map (explicit AG/RS TP
+                                  # combines; requires zero1 TP params)
+    rwkv_impl: str = "scan"       # scan | chunked (per-chunk matmul wkv:
+                                  # state HBM traffic / chunk, MXU-friendly)
+    rwkv_chunk: int = 64
+    batch_axes: tuple = ()        # mesh axes for the batch dim ("" = no
+                                  # activation constraints; set by builders)
+    remat: str = "none"           # none | full | dots
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a TP-shardable multiple (MaxText-style padding;
+        the config keeps the paper-exact vocab_size, logits are sliced)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def layers_in_plan(self) -> int:
+        return sum(len(p) * r for p, r in self.layer_plan)
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        out = []
+        for pattern, r in self.layer_plan:
+            out.extend(list(pattern) * r)
+        return tuple(out)
+
+    def validate(self) -> "ModelConfig":
+        assert self.layers_in_plan == self.n_layers, (
+            f"{self.name}: plan covers {self.layers_in_plan} layers, "
+            f"config says {self.n_layers}")
+        assert self.n_heads % self.n_kv_heads == 0
+        return self
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def uniform_plan(kind: str, n_layers: int):
+    return (((kind,), n_layers),)
+
+
+def cycle_plan(pattern: tuple[str, ...], n_layers: int):
+    """Repeat ``pattern`` to cover n_layers, with a trailing remainder."""
+    p = len(pattern)
+    full, rem = divmod(n_layers, p)
+    plan = []
+    if full:
+        plan.append((tuple(pattern), full))
+    if rem:
+        plan.append((tuple(pattern[:rem]), 1))
+    return tuple(plan)

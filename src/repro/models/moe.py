@@ -1,0 +1,133 @@
+"""Mixture-of-Experts with grouped sort-based dispatch.
+
+The Hanoi mapping (DESIGN.md SS2b): tokens *diverge* into expert paths and
+*reconverge* at the combine.  The dispatch below is the WS-stack discipline
+at tile granularity:
+
+* each expert's [capacity, d] buffer is a *path* executed as one dense block
+  (paths serialized per shard rather than finely interleaved — the paper's
+  cost argument for coarse path scheduling);
+* the scatter indices are the *reconvergence mask*: they record which tokens
+  rejoin where;
+* capacity-dropped tokens are BREAK: removed from the reconvergence mask,
+  they rejoin the residual stream only (never waited on).
+
+Dispatch is GROUPED (GShard-style, group = sequence): routing, sort, scatter
+and combine are all local to a group, so under SPMD no dispatch step needs a
+global collective — a global argsort would force XLA to all-gather the whole
+token stream inside every layer.  Supports Mixtral-style top-k over E experts
+and DeepSeek-style shared + fine-grained routed experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, P
+from .layers import mlp, mlp_struct
+
+
+def moe_struct(cfg: ModelConfig):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    s = {
+        "router": P((d, E), ("embed", "experts"), scale=0.02),
+        "w_gate": P((E, d, ff), ("experts", "embed", "mlp")),
+        "w_up": P((E, d, ff), ("experts", "embed", "mlp")),
+        "w_down": P((E, ff, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = mlp_struct(d, (cfg.moe_d_ff or cfg.d_ff)
+                                 * cfg.n_shared_experts)
+    return s
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    E, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(tokens_per_group * k / E * cfg.capacity_factor)
+    return max(4, -(-cap // 4) * 4)
+
+
+def _dispatch_group(xt, gates, eidx, C: int, E: int, k: int):
+    """One group: xt [T, d]; gates/eidx [T, k].  All ops group-local."""
+    T, d = xt.shape
+    flat_e = eidx.reshape(-1)                            # [T*k]
+    order = jnp.argsort(flat_e, stable=True)             # local sort
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k) - offsets[sorted_e]
+    kept = rank < C                                      # BREAK: drop overflow
+    dest = jnp.where(kept, sorted_e * C + rank, E * C)   # OOB -> scatter-drop
+    src_token = order // k
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    buf = buf.at[dest].set(xt[src_token], mode="drop")
+    slot_gate = (gates.reshape(-1)[order] * kept).astype(xt.dtype)
+    return buf, dest, src_token, slot_gate
+
+
+def _combine_group(ex_out, dest, src_token, slot_gate, T: int):
+    # dropped slots have gate 0: the clipped OOB gather contributes nothing
+    contrib = ex_out.at[dest].get(mode="clip") * slot_gate[:, None]
+    return jnp.zeros((T, ex_out.shape[-1]), ex_out.dtype) \
+        .at[src_token].add(contrib)
+
+
+def moe(params, x, cfg: ModelConfig):
+    """x: [B, S, d] -> ([B, S, d], aux).  Groups = sequences (S > 1) or the
+    whole batch as one group (decode)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    grouped = S > 1
+    xg = x if grouped else x.reshape(1, B, d)            # [G, T, d]
+    G, T = xg.shape[0], xg.shape[1]
+    C = _capacity(T, cfg)
+
+    logits = (xg @ params["router"].astype(xg.dtype)).astype(jnp.float32)
+    gates_all = jax.nn.softmax(logits, axis=-1)          # [G, T, E]
+    gates, eidx = jax.lax.top_k(gates_all, k)            # [G, T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def shard_g(t, *extra):
+        """Pin the group dim to the data axes — the vmapped scatters defeat
+        SPMD propagation and would replicate every expert-path buffer."""
+        if not cfg.batch_axes:
+            return t
+        from jax.sharding import PartitionSpec as PS
+        spec = [tuple(cfg.batch_axes)] + list(extra)
+        spec += [None] * (t.ndim - len(spec))
+        return jax.lax.with_sharding_constraint(t, PS(*spec))
+
+    buf, dest, src, sgate = jax.vmap(
+        lambda xt, g, e: _dispatch_group(xt, g, e, C, E, k))(xg, gates, eidx)
+    ex_in = shard_g(buf).reshape(G, E, C, d)             # [G, E, C, d]
+
+    w_gate = params["w_gate"].astype(xg.dtype)
+    w_up = params["w_up"].astype(xg.dtype)
+    w_down = params["w_down"].astype(xg.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, w_gate)) \
+        * jnp.einsum("gecd,edf->gecf", ex_in, w_up)
+    h = shard_g(h, None, None, "model")                  # ff TP-sharded
+    ex_out = jnp.einsum("gecf,efd->gecd", h, w_down)
+    ex_out = shard_g(ex_out).reshape(G, E * C, d)
+
+    out = jax.vmap(lambda eo, de, sr, sg:
+                   _combine_group(eo, de, sr, sg, T))(ex_out, dest, src, sgate)
+    out = shard_g(out)
+    out = out if grouped else out.reshape(B, S, d)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(params["shared"], x.reshape(B * S, d)).reshape(
+            B, S, d)
+
+    aux = load_balance_loss(gates_all.reshape(-1, E), eidx.reshape(-1, k), E)
+    return out, aux
+
+
+def load_balance_loss(gates_all: jax.Array, eidx: jax.Array, E: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    onehot = jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32)
+    f = onehot.mean(0)
+    p = gates_all.mean(0)
+    return E * jnp.sum(f * p)

@@ -1,0 +1,295 @@
+"""Recurrent temporal-mix layers: RG-LRU (RecurrentGemma/Griffin) and RWKV-6
+(Finch, data-dependent decay).  Both expose a parallel (train/prefill) path
+via associative scan / blocked scan and a single-step path for decode.
+
+These are the sub-quadratic families the long_500k shape exercises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, P
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin): h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+# ---------------------------------------------------------------------------
+
+_C_LOG_A = -8.0     # Griffin's  c * softplus(Lambda)  scaling
+
+
+def rglru_struct(cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    return {
+        "in_x": P((d, w), ("embed", "mlp")),
+        "in_y": P((d, w), ("embed", "mlp")),
+        "conv_w": P((cw, w), ("conv", "mlp"), scale=0.02),
+        "conv_b": P((w,), ("mlp",), init="zeros"),
+        "gate_a": P((w, w), ("mlp", "mlp2"), scale=0.02),
+        "gate_i": P((w, w), ("mlp", "mlp2"), scale=0.02),
+        "log_lambda": P((w,), ("mlp",), init="ones"),
+        "out": P((w, d), ("mlp", "embed")),
+    }
+
+
+def _rglru_coeffs(params, xb):
+    """Per-step recurrence coefficients a_t, b_t from branch input xb."""
+    r = jax.nn.sigmoid(xb @ params["gate_a"].astype(xb.dtype))
+    i = jax.nn.sigmoid(xb @ params["gate_i"].astype(xb.dtype))
+    log_a = _C_LOG_A * jax.nn.softplus(
+        params["log_lambda"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * xb.astype(jnp.float32))
+    return a, b
+
+
+def _conv1d(params, x, state=None):
+    """Causal depthwise conv along time. x: [B, S, w]."""
+    cw = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * params["conv_w"][i].astype(x.dtype)
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :] if cw > 1 else xp[:, :0, :]
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def rglru(params, x, *, cfg: ModelConfig, state=None, use_kernel: bool = False):
+    """x: [B, S, d].  state = dict(conv=[B,cw-1,w], h=[B,w]) for decode.
+
+    Returns (out [B,S,d], new_state)."""
+    gx = jax.nn.gelu(x @ params["in_x"].astype(x.dtype))
+    xb = x @ params["in_y"].astype(x.dtype)
+    xb, conv_state = _conv1d(params, xb, None if state is None
+                             else state["conv"])
+    a, b = _rglru_coeffs(params, xb)
+
+    if state is None:
+        if use_kernel:
+            from repro.kernels import ops as kops
+            h = kops.rglru_scan(a, b)
+        else:
+            def bin_op(p, q):
+                a1, b1 = p
+                a2, b2 = q
+                return a1 * a2, a2 * b1 + b2
+            _, h = jax.lax.associative_scan(bin_op, (a, b), axis=1)
+        h0 = jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+    else:
+        h = (a * state["h"][:, None, :] + b)     # S == 1
+        h0 = None
+    h = h.astype(x.dtype)
+    out = (gx * h) @ params["out"].astype(x.dtype)
+    new_state = {"conv": conv_state, "h": h[:, -1, :].astype(jnp.float32)}
+    return out, new_state
+
+
+def rglru_state_struct(cfg: ModelConfig, batch: int):
+    w, cw = cfg.lru_width or cfg.d_model, cfg.conv_width
+    return {"conv": P((batch, cw - 1, w), ("batch", None, "mlp"),
+                      init="zeros"),
+            "h": P((batch, w), ("batch", "mlp"), init="zeros",
+                   dtype="float32")}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+def rwkv6_struct(cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    lora = max(32, d // 16)
+    return {
+        "tm": {   # time-mix interpolation deltas (data-dependent, Finch)
+            "mu_base": P((5, d), (None, "embed"), init="zeros"),
+            "lora_a": P((d, lora), ("embed", "mlp"), scale=0.02),
+            "lora_b": P((5, lora, d), (None, "mlp", "embed"), scale=0.02),
+            "wr": P((d, d), ("embed", "heads_x")),
+            "wk": P((d, d), ("embed", "heads_x")),
+            "wv": P((d, d), ("embed", "heads_x")),
+            "wg": P((d, d), ("embed", "heads_x")),
+            "wo": P((d, d), ("heads_x", "embed")),
+            "decay_base": P((d,), ("embed",), init="zeros"),
+            "decay_a": P((d, lora), ("embed", "mlp"), scale=0.02),
+            "decay_b": P((lora, d), ("mlp", "embed"), scale=0.02),
+            "bonus": P((H, hd), ("heads", "head_dim"), init="zeros"),
+            "ln_x": P((d,), ("embed",), init="ones"),
+        },
+        "cm": {   # channel mix
+            "mu_k": P((d,), ("embed",), init="zeros"),
+            "wk": P((d, cfg.d_ff), ("embed", "mlp")),
+            "wv": P((cfg.d_ff, d), ("mlp", "embed")),
+            "mu_r": P((d,), ("embed",), init="zeros"),
+            "wr": P((d, d), ("embed", "heads_x")),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; position 0 takes `last` (decode state)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, *, cfg: ModelConfig, state=None,
+                   use_kernel: bool = False):
+    """x: [B, S, d]. state = dict(shift=[B,1,d], wkv=[B,H,hd,hd])."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    shift_in = None if state is None else state["shift"]
+    xs = _token_shift(x, shift_in)
+    dx = xs - x
+    # data-dependent interpolation (Finch lora)
+    lx = jnp.tanh(x @ p["lora_a"].astype(x.dtype))
+    mu = p["mu_base"].astype(x.dtype)[:, None, None, :] \
+        + jnp.einsum("bsl,nld->nbsd", lx, p["lora_b"].astype(x.dtype))
+    xr, xk, xv, xg, xw = [x + dx * (mu[i]) for i in range(5)]
+
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay  w_t in (0, 1)
+    dw = jnp.tanh(xw @ p["decay_a"].astype(x.dtype)) @ p["decay_b"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32)
+                             + dw.astype(jnp.float32), -8.0, 4.0))
+    w = jnp.exp(logw).reshape(B, S, H, hd)                 # decay per channel
+    u = p["bonus"].astype(jnp.float32)                     # [H, hd]
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+
+    if state is None and use_kernel:
+        from repro.kernels import ops as kops
+        out, s_last = kops.rwkv6_scan(rf, kf, vf, wf, u)
+    elif (state is None and cfg.rwkv_impl == "chunked"
+          and (ch := rwkv6_wkv_chunked(
+              rf, kf, vf, logw.reshape(B, S, H, hd), u,
+              chunk=cfg.rwkv_chunk)) is not None):
+        out, s_last = ch
+    else:
+        s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+              else state["wkv"])
+        un = max(1, cfg.rwkv_unroll) if state is None else 1
+        if S % un:
+            un = 1
+
+        def step(s, inp):
+            # `un` tokens per scan body: the [hd, hd] state round-trips HBM
+            # once per body instead of once per token (the VMEM-resident
+            # Pallas kernel takes this to a full chunk on real TPUs)
+            outs = []
+            for t in range(un):
+                rt, kt, vt, wt = (x[:, t] for x in inp)    # [B, H, hd]
+                at = kt[..., :, None] * vt[..., None, :]   # [B,H,hd,hd]
+                outs.append(jnp.einsum("bhk,bhkv->bhv", rt,
+                                       s + u[None, :, :, None] * at))
+            # recompute the state once over the body (fused elementwise)
+                s = wt[..., :, None] * s + at
+            return s, jnp.stack(outs, axis=1)
+
+        xs_t = tuple(
+            jnp.moveaxis(t, 1, 0).reshape(S // un, un, B, H, hd)
+            .transpose(0, 2, 1, 3, 4)
+            for t in (rf, kf, vf, wf))                      # [S/un,B,un,H,hd]
+        s_last, out = jax.lax.scan(step, s0, xs_t)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+    out = out.reshape(B, S, d).astype(x.dtype)
+    # group norm over heads (ln_x), then gate
+    out = out.reshape(B, S, H, hd)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = ((out - mean) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, d)
+    out = out * p["ln_x"].astype(x.dtype)
+    out = (out * g) @ p["wo"].astype(x.dtype)
+    new_state = {"shift": x[:, -1:, :], "wkv": s_last}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, x, *, state=None):
+    xs = _token_shift(x, None if state is None else state["shift"])
+    dx = xs - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    out = r * (k @ p["wv"].astype(x.dtype))
+    return out, {"shift": x[:, -1:, :]}
+
+
+def rwkv6_state_struct(cfg: ModelConfig, batch: int):
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "tm_shift": P((batch, 1, d), ("batch", None, "embed"), init="zeros"),
+        "wkv": P((batch, H, hd, hd), ("batch", "heads", None, None),
+                 init="zeros", dtype="float32"),
+        "cm_shift": P((batch, 1, d), ("batch", None, "embed"), init="zeros"),
+    }
+
+
+def rwkv6_wkv_chunked(r, k, v, logw, u, *, chunk: int = 64):
+    """Chunked-parallel RWKV-6 wkv: per-chunk MATMULS instead of a per-token
+    scan.  The [hd, hd] state round-trips HBM once per CHUNK (the naive scan
+    does it per token — the dominant memory term of the rwkv6 cells), and the
+    intra-chunk work becomes MXU-shaped [c, c] products.
+
+    Derivation (per head; D_t = diag(w_t), P_t = prod_{j<=t} D_j):
+      S_t   = D_t S_{t-1} + k_t v_t^T
+      out_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+            = (r_t*P_{t-1}) S_0  +  sum_{i<t} (r_t*P_{t-1}/P_i . k_i) v_i
+              + (r_t*u . k_t) v_t
+    with P in log space (clw = cumsum(log w), exponents of the pairwise term
+    are clw_{t-1}-clw_i <= 0 for i < t: always safe; the factored split
+    a = r*exp(clw_shift), b = k*exp(-clw) clips clw at -30 — contributions
+    below e^-30 are zero in f32 anyway).
+
+    r,k,v,logw: [B, S, H, hd] f32; u: [H, hd].  Returns (out, s_last).
+    """
+    B, S, H, hd = r.shape
+    c = min(chunk, S)
+    if S % c:
+        return None                     # caller falls back to the scan
+    n = S // c
+    rc, kc, vc, lwc = (t.reshape(B, n, c, H, hd).transpose(1, 0, 2, 3, 4)
+                       for t in (r, k, v, logw))
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def one(s_in, inp):
+        rt, kt, vt, lw = inp                        # [B, c, H, hd]
+        clw = jnp.cumsum(lw, axis=1)                # inclusive
+        clw_sh = jnp.concatenate(
+            [jnp.zeros_like(clw[:, :1]), clw[:, :-1]], axis=1)  # exclusive
+        clip = lambda x: jnp.clip(x, -30.0, 0.0)
+        a = rt * jnp.exp(clip(clw_sh))              # r * P_{t-1}/P_chunkstart
+        b = kt * jnp.exp(-jnp.maximum(clw, -30.0))  # k / P_i   (safe: >= e^-30 ... e^+30? no: -clw in [0, 30])
+        # state term: (r*P_{t-1}) . S_in
+        out = jnp.einsum("bthd,bhdv->bthv", a, s_in)
+        # intra-chunk: strictly-lower-triangular pairwise term
+        scores = jnp.einsum("bthd,bihd->bhti", a, b)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        out = out + jnp.einsum("bhti,bihd->bthd", scores, vt)
+        # bonus diagonal
+        out = out + jnp.einsum("bthd,bthd->bth", rt * u[None, None], kt)[
+            ..., None] * vt
+        # state update: S_out = P_last S_in + sum_i (k_i P_last/P_i) v_i^T
+        decay_all = jnp.exp(clip(clw[:, -1:]))      # [B, 1, H, hd]
+        k_dec = kt * jnp.exp(clip(clw[:, -1:] - clw))
+        s_out = decay_all[:, 0, :, :, None] * s_in \
+            + jnp.einsum("bihd,bihv->bhdv", k_dec, vt)
+        return s_out, out
+
+    s_last, outs = jax.lax.scan(one, s0, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out, s_last

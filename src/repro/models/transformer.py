@@ -1,0 +1,293 @@
+"""Model assembly: layer plans -> param structure, forward, loss, prefill and
+decode, for every assigned architecture family.
+
+Layers are STACKED per plan segment and iterated with ``lax.scan`` so the
+lowered HLO stays compact (one body per distinct layer pattern) — essential
+for compiling 30+ dry-run cells against 512-device meshes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .base import (GLOBAL, LOCAL, RECURRENT, RWKV, SWA, ModelConfig, P,
+                   abstract_params, init_params, partition_specs)
+from .layers import (attention, attention_cache_struct, attention_struct,
+                     cross_entropy, embed_struct, head_struct, lm_logits, mlp,
+                     mlp_struct, rmsnorm, rmsnorm_struct, shard_act)
+from .moe import moe, moe_struct
+from .recurrent import (rglru, rglru_state_struct, rglru_struct,
+                        rwkv6_channel_mix, rwkv6_state_struct,
+                        rwkv6_struct, rwkv6_time_mix)
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+
+def _stack(struct, r: int):
+    """Add a leading stacked-layers axis to every P leaf."""
+    return jax.tree_util.tree_map(
+        lambda p: P((r,) + p.shape, ("layers",) + p.axes, init=p.init,
+                    scale=p.scale, dtype=p.dtype),
+        struct, is_leaf=lambda x: isinstance(x, P))
+
+
+def _segments(cfg: ModelConfig) -> list[dict]:
+    """Expand the layer plan into segments with per-position layer kinds and
+    moe-ness.  first_dense_layers (DeepSeek) forces dense FFN at the start."""
+    segs = []
+    layer_idx = 0
+    for pattern, repeat in cfg.layer_plan:
+        if (cfg.family == "moe" and cfg.first_dense_layers > layer_idx
+                and repeat > 1):
+            # split off the dense prefix as its own segment(s)
+            n_dense = min(repeat, -(-(cfg.first_dense_layers - layer_idx)
+                                    // len(pattern)))
+            segs.append({"pattern": pattern, "repeat": n_dense,
+                         "moe": False})
+            layer_idx += n_dense * len(pattern)
+            if repeat - n_dense:
+                segs.append({"pattern": pattern, "repeat": repeat - n_dense,
+                             "moe": True})
+                layer_idx += (repeat - n_dense) * len(pattern)
+        else:
+            is_moe = cfg.family == "moe" and layer_idx >= cfg.first_dense_layers
+            segs.append({"pattern": pattern, "repeat": repeat, "moe": is_moe})
+            layer_idx += repeat * len(pattern)
+    return segs
+
+
+def _layer_struct(cfg: ModelConfig, kind: str, is_moe: bool):
+    d = cfg.d_model
+    if kind == RWKV:
+        s = rwkv6_struct(cfg)
+        return {"ln1": rmsnorm_struct(d), "tm": s["tm"],
+                "ln2": rmsnorm_struct(d), "cm": s["cm"]}
+    if kind == RECURRENT:
+        core: dict[str, Any] = {"rglru": rglru_struct(cfg)}
+    else:
+        core = {"attn": attention_struct(cfg)}
+    ffn = moe_struct(cfg) if is_moe else mlp_struct(d, cfg.d_ff)
+    return {"ln1": rmsnorm_struct(d), **core,
+            "ln2": rmsnorm_struct(d), "ffn": ffn}
+
+
+def model_struct(cfg: ModelConfig):
+    segs = _segments(cfg)
+    seg_structs = []
+    for seg in segs:
+        per_pos = {str(j): _layer_struct(cfg, kind, seg["moe"])
+                   for j, kind in enumerate(seg["pattern"])}
+        seg_structs.append(_stack(per_pos, seg["repeat"]))
+    return {
+        "embed": embed_struct(cfg),
+        "segments": seg_structs,
+        "final_norm": rmsnorm_struct(cfg.d_model),
+        "head": head_struct(cfg),
+    }
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-state structure mirroring the segment layout."""
+    segs = _segments(cfg)
+    out = []
+    for seg in segs:
+        per_pos = {}
+        for j, kind in enumerate(seg["pattern"]):
+            if kind == RWKV:
+                per_pos[str(j)] = rwkv6_state_struct(cfg, batch)
+            elif kind == RECURRENT:
+                per_pos[str(j)] = rglru_state_struct(cfg, batch)
+            else:
+                # local/swa layers only need a window-sized cache
+                n = max_len if kind == GLOBAL else min(
+                    max_len, max(cfg.window_size, 1))
+                per_pos[str(j)] = attention_cache_struct(cfg, batch, n)
+        out.append(_stack(per_pos, seg["repeat"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    e = params["embed"]
+    if cfg.frontend == "audio_stub":
+        # precomputed frame embeddings (the modality frontend is a stub)
+        x = batch["frames"] @ e["frontend_proj"].astype(batch["frames"].dtype)
+    elif cfg.frontend == "vision_stub":
+        tok = e["tok"][batch["tokens"]]
+        patch = batch["patches"] @ e["frontend_proj"].astype(
+            batch["patches"].dtype)
+        x = jnp.concatenate([patch.astype(tok.dtype), tok], axis=1)
+    else:
+        x = e["tok"][batch["tokens"]]
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def _apply_layer(lp, x, *, cfg: ModelConfig, kind: str, is_moe: bool,
+                 positions, cache=None, cache_pos=None):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if kind == RWKV:
+        out, tm_state = rwkv6_time_mix(
+            lp["tm"], h, cfg=cfg,
+            state=None if cache is None else {"shift": cache["tm_shift"],
+                                              "wkv": cache["wkv"]})
+        x = x + out
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        out2, cm_state = rwkv6_channel_mix(
+            lp["cm"], h2,
+            state=None if cache is None else {"shift": cache["cm_shift"]})
+        x = x + out2
+        new_cache = {"tm_shift": tm_state["shift"], "wkv": tm_state["wkv"],
+                     "cm_shift": cm_state["shift"]}
+        return x, new_cache, aux
+
+    if kind == RECURRENT:
+        out, new_cache = rglru(lp["rglru"], h, cfg=cfg, state=cache)
+    else:
+        out, new_cache = attention(lp["attn"], h, cfg=cfg, kind=kind,
+                                   positions=positions, kv_cache=cache,
+                                   cache_pos=cache_pos)
+    # constrain the SUBLAYER OUTPUT (a TP partial-sum) to the seq-sharded
+    # layout before the residual add: GSPMD then lowers the combine as a
+    # reduce-scatter instead of all-reduce + slice (2x collective bytes)
+    x = x + shard_act(out, cfg)
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if is_moe:
+        out2, aux = moe(lp["ffn"], h2, cfg)
+    elif cfg.tp_impl == "shard_map" and cfg.batch_axes and cache is None:
+        from .shardmap_tp import mlp_tp
+        return x + mlp_tp(lp["ffn"], h2, cfg), new_cache, aux
+    else:
+        out2 = mlp(lp["ffn"], h2)
+    return shard_act(x + shard_act(out2, cfg), cfg), new_cache, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *,
+            return_cache: bool = False):
+    """Full-sequence forward (training / prefill).
+
+    Returns (logits, aux_loss, caches) — caches is None unless requested.
+    """
+    x = shard_act(_embed(params, cfg, batch), cfg)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)   # 1-D: batch-independent
+    segs = _segments(cfg)
+    caches = [] if return_cache else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for seg, seg_params in zip(segs, params["segments"]):
+        pattern, is_moe = seg["pattern"], seg["moe"]
+
+        def body(x, lp, pattern=pattern, is_moe=is_moe):
+            new_caches = {}
+            aux_sum = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(pattern):
+                x, c, aux = _apply_layer(lp[str(j)], x, cfg=cfg, kind=kind,
+                                         is_moe=is_moe, positions=positions)
+                new_caches[str(j)] = c
+                aux_sum = aux_sum + aux
+            return x, (new_caches, aux_sum)
+
+        body = _remat_wrap(body, cfg)
+
+        if cfg.scan_layers:
+            def scan_body(carry, lp):
+                x, auxc = carry
+                x, (cs, aux) = body(x, lp)
+                return (x, auxc + aux), (cs if return_cache else 0)
+            (x, aux_total), ys = jax.lax.scan(scan_body, (x, aux_total),
+                                              seg_params)
+            if return_cache:
+                caches.append(ys)
+        else:
+            for i in range(seg["repeat"]):
+                lp = jax.tree_util.tree_map(lambda a: a[i], seg_params)
+                x, (cs, aux) = body(x, lp)
+                aux_total = aux_total + aux
+                if return_cache:
+                    caches.append(cs)     # unstacked; tests only
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+    return logits, aux_total, caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Scalar loss for one batch; labels/masks per family."""
+    logits, aux, _ = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if cfg.frontend == "vision_stub":
+        # logits cover [patches; tokens] — score text positions only
+        n_txt = labels.shape[1]
+        logits = logits[:, -n_txt:]
+    if cfg.is_decoder and cfg.frontend == "token":
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+        mask = None if mask is None else mask[:, 1:]
+    ce = cross_entropy(logits, labels, mask)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, caches, tokens: jax.Array,
+                cache_pos: jax.Array):
+    """One token step.  tokens: [B, 1] int32; caches as from cache_struct
+    (stacked per segment); cache_pos: scalar int32 position.
+
+    Returns (logits [B, 1, V], new_caches).
+    """
+    e = params["embed"]
+    x = e["tok"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
+                                       e["tok"].dtype)
+    B = x.shape[0]
+    positions = jnp.full((1,), cache_pos, jnp.int32)   # 1-D, batch-free
+    segs = _segments(cfg)
+    new_caches = []
+
+    for seg, seg_params, seg_cache in zip(segs, params["segments"], caches):
+        pattern, is_moe = seg["pattern"], seg["moe"]
+
+        def body(x, lp_cache, pattern=pattern, is_moe=is_moe):
+            lp, cache = lp_cache
+            ncs = {}
+            for j, kind in enumerate(pattern):
+                x, nc, _ = _apply_layer(
+                    lp[str(j)], x, cfg=cfg, kind=kind, is_moe=is_moe,
+                    positions=positions, cache=cache[str(j)],
+                    cache_pos=cache_pos)
+                ncs[str(j)] = nc
+            return x, ncs
+
+        def scan_body(x, lp_cache):
+            x, ncs = body(x, lp_cache)
+            return x, ncs
+
+        x, ncs = jax.lax.scan(scan_body, x, (seg_params, seg_cache))
+        new_caches.append(ncs)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+    return logits, new_caches

@@ -1,0 +1,79 @@
+"""AdamW in pure JAX with fully-sharded state.
+
+Optimizer moments mirror the parameter pytree, so the same PartitionSpec
+trees shard them (first/second moments live wherever the weights live — the
+ZeRO-3 layout when the FSDP axis is active)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import P, abstract_params
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_init_struct(struct, dtype=jnp.float32):
+    """Structure tree of the optimizer state (for specs / dry-run)."""
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: P(p.shape, p.axes, init="zeros", dtype=p.dtype),
+            struct, is_leaf=lambda x: isinstance(x, P)),
+        "v": jax.tree_util.tree_map(
+            lambda p: P(p.shape, p.axes, init="zeros", dtype=p.dtype),
+            struct, is_leaf=lambda x: isinstance(x, P)),
+        "step": P((), (), init="zeros", dtype="int32"),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr: jax.Array | float | None = None):
+    """Returns (new_params, new_state, grad_norm)."""
+    lr = cfg.lr if lr is None else lr
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        pf = p.astype(jnp.float32)
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m.astype(p.dtype), v.astype(p.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,13 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int = 200,
+                    total: int = 10_000, floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, step / max(1, warmup))
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

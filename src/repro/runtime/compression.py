@@ -1,0 +1,91 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Two pieces:
+
+* :func:`compressed_allreduce` — a shard_map collective that moves int8 on
+  the wire instead of f32: phase 1 all_to_all of int8 chunks + local f32
+  reduction, phase 2 all_gather of the requantized partial sums.  Wire bytes
+  = 2 * n/4 vs. 2n for a ring f32 all-reduce (~4x compression).
+* :func:`ef_compress_grads` — error-feedback wrapper (Seide et al.): the
+  quantization residual is carried to the next step, preserving convergence
+  (sum of applied updates telescopes to the true gradient sum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as PS
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _c_allreduce_local(x, *, axis: str, n: int):
+    """Body run per-shard under shard_map; x: local f32 [m] with m % n == 0."""
+    m = x.shape[0]
+    chunk = m // n
+    q, s = quantize_int8(x)
+    # phase 1: each peer receives its chunk from everyone (int8 on the wire)
+    qx = q.reshape(n, chunk)
+    recv = jax.lax.all_to_all(qx[None], axis, split_axis=1,
+                              concat_axis=0, tiled=False)[:, 0]
+    scales = jax.lax.all_gather(s, axis)                 # [n] f32 (tiny)
+    partial = jnp.sum(recv.astype(jnp.float32)
+                      * scales[:, None], axis=0)         # my chunk, reduced
+    # phase 2: requantize the reduced chunk, all_gather int8
+    q2, s2 = quantize_int8(partial)
+    allq = jax.lax.all_gather(q2, axis)                  # [n, chunk] int8
+    alls = jax.lax.all_gather(s2, axis)                  # [n]
+    return (allq.astype(jnp.float32) * alls[:, None]).reshape(m)
+
+
+def compressed_allreduce(x: jax.Array, mesh: Mesh, axis: str = "data"):
+    """All-reduce x (replicated result) over ``axis`` with int8 wire format.
+
+    x is flattened and zero-padded to a multiple of the axis size."""
+    n = mesh.shape[axis]
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    other = tuple(a for a in mesh.axis_names if a != axis)
+    fn = shard_map(
+        functools.partial(_c_allreduce_local, axis=axis, n=n),
+        mesh=mesh, in_specs=PS(), out_specs=PS(),
+        check_rep=False)
+    out = fn(flat)
+    return out[:flat.shape[0] - pad if pad else None].reshape(x.shape)
+
+
+def ef_compress_grads(grads, error_state):
+    """Error feedback: returns (compressed_grads, new_error_state).
+
+    compressed = deQ(Q(g + e));  e' = (g + e) - compressed.
+    """
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree_util.tree_map(one, grads, error_state)
+    comp = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return comp, err

@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh after node loss / scale-up and reshard
+state onto it.
+
+The recovery path after a hardware failure is:
+
+1. the training driver catches the failure (timeout / unreachable host),
+2. ``survivors_mesh`` builds the largest well-formed mesh from remaining
+   devices (keeping the model axis intact — TP groups must stay whole, so
+   recovery drops whole data-parallel rows),
+3. optimizer/params are restored from the last committed checkpoint with
+   ``restore_checkpoint(..., shardings=new_specs)`` (the checkpoint layout is
+   mesh-agnostic), or — if state is still live — ``reshard_tree`` device_puts
+   it onto the new mesh directly,
+4. the data pipeline re-slices the SAME global batch order by host count, so
+   sample order is preserved across the re-shape (determinism tests).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def survivors_mesh(devices, axis_names: tuple[str, ...],
+                   model_axis_size: int) -> Mesh:
+    """Largest (data, model) mesh from surviving devices; whole TP groups
+    only.  ``devices`` is the flat surviving device list."""
+    n = len(devices)
+    rows = n // model_axis_size
+    if rows < 1:
+        raise ValueError("not enough devices for one model-parallel group")
+    dev = np.array(devices[: rows * model_axis_size]).reshape(
+        rows, model_axis_size)
+    return Mesh(dev, axis_names)
+
+
+def reshard_tree(tree, mesh: Mesh, spec_tree):
+    """device_put a live tree onto a (new) mesh with the given specs."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.Array, np.ndarray)))

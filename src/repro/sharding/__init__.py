@@ -1,0 +1,5 @@
+from .specs import (batch_pspec, cache_pspecs, data_axes, logical_rules,
+                    param_pspecs)
+
+__all__ = ["batch_pspec", "cache_pspecs", "data_axes", "logical_rules",
+           "param_pspecs"]

@@ -1,0 +1,113 @@
+"""Sharding rule engine: logical axes -> mesh axes per (arch x shape).
+
+Baseline policy (the SS Perf loop iterates on this):
+
+* 2-D weight sharding everywhere: TP on 'model' (mlp/vocab/heads/experts) x
+  FSDP on 'data' (the d_model axis) — optimizer moments inherit it (ZeRO-3);
+* activations: batch on ('pod', 'data') (pure DP across pods);
+* GQA: shard the q-head axis when divisible by the model-axis size, else
+  the head_dim axis (all assigned archs have hd % 16 == 0);
+* MoE: expert-parallel on 'model' when n_experts divides, else TP inside the
+  expert ffn (Mixtral's 8 experts on a 16-way axis);
+* decode: KV caches shard batch on data and head_dim on model; the
+  batch=1 long-context cell flips to sequence-parallel caches (SP) on 'data'.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.base import ModelConfig, P
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh, *,
+                  fsdp: bool = True, overrides: dict | None = None) -> dict:
+    """Map logical param axes to mesh axes for this arch."""
+    tp = _axis_size(mesh, "model")
+    dax = data_axes(mesh)
+    fsdp_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    rules: dict = {
+        "embed": fsdp_ax,
+        "mlp": "model",
+        "mlp2": None,
+        "vocab": "model" if cfg.padded_vocab % tp == 0 else None,
+        "heads": "model" if cfg.n_heads % tp == 0 else None,
+        "kv_heads": "model" if cfg.n_kv_heads % tp == 0 else None,
+        "head_dim": ("model" if (cfg.n_heads % tp and cfg.hd % tp == 0)
+                     else None),
+        "heads_x": "model",          # rwkv fused d x d projections
+        "experts": "model" if (cfg.n_experts and cfg.n_experts % tp == 0)
+                   else None,
+        "frontend": None,
+        "conv": None,
+        "layers": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def param_pspecs(struct, cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+                 overrides: dict | None = None):
+    from repro.models.base import partition_specs
+    return partition_specs(struct,
+                           logical_rules(cfg, mesh, fsdp=fsdp,
+                                         overrides=overrides))
+
+
+def batch_pspec(cfg: ModelConfig, mesh: Mesh, batch: int) -> dict:
+    """PartitionSpecs for each batch field (tokens/labels/frames/...)."""
+    dax = data_axes(mesh)
+    n = 1
+    for a in dax:
+        n *= _axis_size(mesh, a)
+    bspec = dax if (dax and batch % n == 0) else None
+    b = bspec if bspec is None else tuple(bspec)
+    specs = {
+        "tokens": PartitionSpec(b, None),
+        "labels": PartitionSpec(b, None),
+        "loss_mask": PartitionSpec(b, None),
+        "frames": PartitionSpec(b, None, None),
+        "patches": PartitionSpec(b, None, None),
+    }
+    return specs
+
+
+def cache_pspecs(cstruct, cfg: ModelConfig, mesh: Mesh, batch: int,
+                 *, overrides: dict | None = None):
+    """Decode-cache sharding.  batch-shardable -> DP over batch + TP over
+    head_dim/embed; batch=1 (long-context) -> sequence-parallel cache."""
+    from repro.models.base import partition_specs
+    dax = data_axes(mesh)
+    n = 1
+    for a in dax:
+        n *= _axis_size(mesh, a)
+    batch_ok = bool(dax) and batch % n == 0
+    tp = _axis_size(mesh, "model")
+    rules = {
+        "batch": tuple(dax) if batch_ok else None,
+        "cache_seq": None if batch_ok else "data",     # SP for batch=1
+        "kv_heads": "model" if cfg.n_kv_heads % tp == 0 else None,
+        "head_dim": ("model" if cfg.n_kv_heads % tp else None),
+        "embed": "model" if cfg.d_model % tp == 0 else None,
+        "mlp": "model",
+        "heads": "model" if cfg.n_heads % tp == 0 else None,
+        "layers": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return [partition_specs(cs, rules) for cs in cstruct]
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

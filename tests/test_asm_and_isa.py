@@ -1,0 +1,74 @@
+"""Assembler + ISA unit tests: syntax coverage, label resolution, predicate
+encoding, error paths, disassembly smoke."""
+import numpy as np
+import pytest
+
+from repro.core import AsmError, Instr, Op, assemble, disassemble
+from repro.core.isa import F_IMM, F_OP, F_PRED1, F_PRED2, encode_program
+
+
+def test_labels_forward_and_backward():
+    prog = assemble("""
+    top:
+        IADDI R1, R1, 1
+        ISETP.LT P0, R1, 3
+        @P0 BRA top
+        BRA end
+        MOV R2, 99
+    end:
+        EXIT
+    """)
+    assert prog[2, F_OP] == Op.BRA and prog[2, F_IMM] == 0
+    assert prog[3, F_IMM] == 5
+
+
+def test_predicate_encoding():
+    prog = assemble("@!P2 BRA P1, 0")
+    assert prog[0, F_PRED1] == -3
+    assert prog[0, F_PRED2] == 2
+    prog = assemble("@P0 BREAK !P1, B3")
+    assert prog[0, F_PRED1] == 1
+    assert prog[0, F_PRED2] == -2
+
+
+def test_memory_operand_forms():
+    prog = assemble("""
+        LDG R1, [R2]
+        LDG R1, [R2+8]
+        STG [R3 + 4], R1
+        ATOMCAS R5, [R0], R6, R7
+    """)
+    assert prog[0, F_IMM] == 0 and prog[1, F_IMM] == 8
+    assert prog[2, F_IMM] == 4
+    assert prog[3, F_OP] == Op.ATOMCAS
+
+
+def test_bmov_direction_inference():
+    prog = assemble("BMOV R5, B2\nBMOV B2, R5")
+    assert prog[0, F_OP] == Op.BMOV_B2R
+    assert prog[1, F_OP] == Op.BMOV_R2B
+
+
+@pytest.mark.parametrize("bad", [
+    "FROB R1, R2",            # unknown mnemonic
+    "BRA nowhere",            # unresolved label
+    "LDG R1, R2",             # malformed memory operand
+    "BSSY R0, 5",             # wrong register class
+])
+def test_assembler_rejects(bad):
+    with pytest.raises(AsmError):
+        assemble(bad)
+
+
+def test_disassemble_smoke():
+    from repro.core.programs import spinlock_program
+    text = disassemble(spinlock_program())
+    assert "ATOMCAS" in text and "YIELD" in text and "BSYNC" in text
+
+
+def test_encode_decode_roundtrip():
+    from repro.core.isa import decode_program
+    instrs = [Instr(Op.MOV, dst=3, imm=-7), Instr(Op.EXIT, pred1=-1)]
+    table = encode_program(instrs)
+    out = decode_program(table)
+    assert out[0].imm == -7 and out[1].pred1 == -1

@@ -1,0 +1,136 @@
+"""Multi-device integration tests.
+
+These spawn subprocesses with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the flag must be set before jax initializes, and the main test process must
+keep its single-device view), then run REAL sharded computation on an 8-way
+host-device mesh: training steps under pjit, checkpoint save -> elastic
+restore onto a different mesh shape, and the compressed all-reduce collective.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, devices: int = 8) -> dict:
+    """Run ``body`` (python source) in a subprocess; it must print a JSON
+    object on its last stdout line."""
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={devices}"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        """)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_mesh_and_sharded_train_step():
+    """A smoke model trains under a real (data=4, model=2) mesh; loss must
+    decrease and params stay sharded."""
+    res = run_sub("""
+        from repro.launch.train import train
+        res = train("llama3.2-1b", smoke=True, steps=8, batch=8, seq=32,
+                    lr=1e-3, log_every=1000, model_axis=2)
+        p = jax.tree_util.tree_leaves(res["params"])[3]
+        print(json.dumps({
+            "first": res["losses"][0], "last": res["losses"][-1],
+            "n_shards": len(p.addressable_shards),
+            "devices": len(jax.devices())}))
+    """)
+    assert res["devices"] == 8
+    assert res["last"] < res["first"]
+    assert res["n_shards"] == 8
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save on a (4, 2) mesh, restore onto a (2, 2) survivors mesh (node
+    loss dropped one DP row), verify values and new sharding."""
+    res = run_sub(f"""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        from repro.runtime import survivors_mesh
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        x = jnp.arange(64.0).reshape(8, 8)
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
+        save_checkpoint({str(tmp_path)!r}, 5, {{"x": xs}})
+        # node failure: only 4 devices survive; model axis must stay whole
+        new_mesh = survivors_mesh(jax.devices()[:4], ("data", "model"), 2)
+        out = restore_checkpoint(
+            {str(tmp_path)!r}, 5, {{"x": x}},
+            shardings={{"x": NamedSharding(new_mesh, P("data", "model"))}})
+        ok = bool(jnp.all(out["x"] == x))
+        print(json.dumps({{
+            "ok": ok,
+            "new_shards": len(out["x"].addressable_shards),
+            "mesh_shape": list(new_mesesh.devices.shape)
+                if False else list(new_mesh.devices.shape)}}))
+    """)
+    assert res["ok"]
+    assert res["new_shards"] == 4
+    assert res["mesh_shape"] == [2, 2]
+
+
+def test_compressed_allreduce_collective():
+    """shard_map int8 two-phase all-reduce matches the f32 sum within
+    quantization error, on a real 8-device axis."""
+    res = run_sub("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.runtime import compressed_allreduce
+        mesh = jax.make_mesh((8,), ("data",))
+        xs = [jax.random.normal(jax.random.PRNGKey(i), (4096,))
+              for i in range(1)]
+        x = xs[0]
+        out = compressed_allreduce(x, mesh, axis="data")
+        # every shard holds the same replicated x -> allreduce = 8 * x
+        want = 8.0 * x
+        err = float(jnp.max(jnp.abs(out - want)))
+        rel = err / float(jnp.max(jnp.abs(want)))
+        print(json.dumps({"rel_err": rel}))
+    """)
+    assert res["rel_err"] < 0.05
+
+
+def test_dryrun_entry_on_small_mesh():
+    """The dry-run path itself (lower+compile+analyze) on an 8-device mesh —
+    catches sharding/analysis regressions quickly."""
+    res = run_sub("""
+        from jax.sharding import Mesh
+        from repro.launch.steps import build_cell, lower_cell
+        from repro.launch.hlo_analysis import analyze_compiled
+        import numpy as np
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        import repro.configs as C
+        cfg = C.get_config("llama3.2-1b", smoke=True)
+        # monkeypatch a small shape through the cell builder
+        from repro.launch import steps
+        import repro.configs
+        repro.configs.SHAPES["tiny_train"] = C.Shape("tiny_train", 64, 8,
+                                                     "train")
+        orig = repro.configs.get_config
+        def patched(name, smoke=False):
+            return orig(name, smoke=True)
+        steps.get_config = patched
+        cell = steps.build_cell("llama3.2-1b", "tiny_train", mesh)
+        compiled = lower_cell(cell, mesh).compile()
+        roof = analyze_compiled(compiled)
+        print(json.dumps({
+            "flops": roof.flops, "coll": roof.coll_bytes,
+            "dominant": roof.dominant}))
+    """)
+    assert res["flops"] > 0
+    assert res["coll"] > 0

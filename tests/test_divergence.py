@@ -1,0 +1,59 @@
+"""Tile-granularity divergence layer: census invariants + consistency with
+the Pallas kernel's schedule-time predicates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.divergence import (EMPTY, FULL, PARTIAL, MaskSpec, census,
+                                   classify_grid, schedule_order)
+from repro.kernels import tile_stats
+
+
+@settings(max_examples=30, deadline=None)
+@given(sq=st.sampled_from([256, 1024, 4096]),
+       w=st.sampled_from([0, 128, 512, 1024]),
+       causal=st.booleans(),
+       bq=st.sampled_from([64, 128]))
+def test_census_matches_kernel_tile_stats(sq, w, causal, bq):
+    g = classify_grid(sq, sq, MaskSpec(causal=causal, window=w), bq=bq, bk=bq)
+    c = census(g)
+    k = tile_stats(sq, sq, causal=causal, window=w, bq=bq, bk=bq)
+    assert c["empty"] == k["empty"]
+    assert c["partial"] == k["partial"]
+    assert c["full"] == k["full"]
+
+
+def test_diagonal_always_live():
+    g = classify_grid(1024, 1024, MaskSpec(causal=True, window=64))
+    for i in range(g.shape[0]):
+        assert g[i, i] != EMPTY
+
+
+def test_window_bounds_kept_work():
+    """Windowed attention keeps O(S*w) tiles: kept fraction ~ w/S."""
+    S, w = 32768, 1024
+    c = census(classify_grid(S, S, MaskSpec(causal=True, window=w)))
+    upper = (2 * w / S) + 0.02
+    assert c["flops_kept_frac"] <= upper
+
+
+def test_schedule_order_majority_first():
+    g = classify_grid(512, 512, MaskSpec(causal=True))
+    order = schedule_order(g)
+    assert len(order) == census(g)["full"] + census(g)["partial"]
+    # within each row, FULL tiles come before PARTIAL ones
+    by_row = {}
+    for i, j in order:
+        by_row.setdefault(i, []).append(g[i, j])
+    for vals in by_row.values():
+        seen_partial = False
+        for v in vals:
+            if v == PARTIAL:
+                seen_partial = True
+            assert not (seen_partial and v == FULL)
+
+
+def test_kv_padding_tail_is_empty():
+    g = classify_grid(256, 512, MaskSpec(causal=False, kv_len=256))
+    assert (g[:, 2:] == EMPTY).all()
+    assert (g[:, :2] == FULL).all()

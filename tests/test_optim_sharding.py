@@ -1,0 +1,103 @@
+"""Optimizer + sharding-spec unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.configs import ARCH_NAMES, get_config
+from jax.sharding import AbstractMesh
+
+
+def make_spec_mesh():
+    # the rule engine only reads shape/axis_names: an AbstractMesh works
+    # in the single-device test process
+    return AbstractMesh((16, 16), ("data", "model"))
+from repro.models import model_struct, partition_specs
+from repro.models.base import P
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.sharding import logical_rules, param_pspecs
+
+
+def test_adamw_quadratic_convergence():
+    A = jnp.eye(4) * jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    b = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+    params = {"x": jnp.zeros(4)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(300):
+        g = {"x": A @ params["x"] - b}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["x"]),
+                               np.asarray(jnp.linalg.solve(A, b)), atol=1e-2)
+
+
+def test_adamw_grad_clip_bounds_update():
+    params = {"x": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    _, _, gnorm = adamw_update(params, {"x": jnp.full(3, 1e6)}, state, cfg)
+    assert float(gnorm) > 1e5      # reported norm is pre-clip
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100)) == 0.0
+    assert float(cosine_schedule(10, peak_lr=1.0, warmup=10,
+                                 total=100)) == pytest.approx(1.0)
+    end = float(cosine_schedule(100, peak_lr=1.0, warmup=10, total=100))
+    assert end == pytest.approx(0.1, abs=1e-6)
+
+
+def test_partition_specs_no_duplicate_axes():
+    """A mesh axis must never appear twice in one PartitionSpec."""
+    mesh = make_spec_mesh()
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        struct = model_struct(cfg)
+        specs = param_pspecs(struct, cfg, mesh)
+        for spec in jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: isinstance(x, PartitionSpec)):
+            flat = []
+            for s in spec:
+                if s is None:
+                    continue
+                flat.extend(s if isinstance(s, tuple) else (s,))
+            assert len(flat) == len(set(flat)), (arch, spec)
+
+
+def test_partition_specs_divisibility():
+    """Sharded dims must divide by the mesh axis size for every arch."""
+    mesh = make_spec_mesh()
+    sizes = dict(mesh.shape)
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        struct = model_struct(cfg)
+        specs = param_pspecs(struct, cfg, mesh)
+
+        def check(leaf: P, spec: PartitionSpec):
+            for dim, s in zip(leaf.shape, tuple(spec)):
+                if s is None:
+                    continue
+                n = 1
+                for ax in (s if isinstance(s, tuple) else (s,)):
+                    n *= sizes[ax]
+                assert dim % n == 0, (arch, leaf.shape, spec)
+
+        jax.tree_util.tree_map(check, struct, specs,
+                               is_leaf=lambda x: isinstance(x, P))
+
+
+def test_vocab_padding_only_when_needed():
+    hub = get_config("hubert-xlarge")
+    assert hub.padded_vocab == 512 and hub.vocab_size == 504
+    llama = get_config("llama3.2-1b")
+    assert llama.padded_vocab == llama.vocab_size    # 128256 % 256 == 0
+
+
+def test_cell_map_counts():
+    from repro.configs import run_cells, skipped_cells
+    runs, skips = run_cells(), skipped_cells()
+    assert len(runs) + len(skips) == 40
+    assert len(runs) == 33
+    assert ("hubert-xlarge", "decode_32k") in [(a, s) for a, s, _ in skips]
+    assert ("rwkv6-3b", "long_500k") in runs

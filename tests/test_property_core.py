@@ -1,0 +1,205 @@
+"""Property-based validation of the control-flow machinery.
+
+Random structured programs (If/While nests with data-dependent conditions,
+BREAK early exits, Bx spilling pressure) are lowered by the compiler pass and
+must satisfy, on every machine:
+
+* Hanoi == per-thread scalar reference on all architectural state
+  (the paper's correctness criterion);
+* pre-Volta SIMT-Stack == reference too (these programs are deadlock-free);
+* the Turing-oracle heuristic (skip ALL BSYNCs) still produces correct
+  architectural results — reconvergence is a performance feature, not a
+  correctness one, for race-free programs;
+* trace invariants: non-empty masks, no lane in two paths at once.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MachineConfig, Op, compile_structured, emit_text,
+                        run_hanoi, run_reference, run_simt_stack)
+from repro.core.structured import If, Raw, Seq, While
+
+W = 8
+MEM = 64
+BASE_CFG = MachineConfig(n_threads=W, n_regs=16, n_preds=4, n_bx=8,
+                         mem_size=MEM, max_steps=20_000)
+
+# lane-private address offsets: lower half of memory is read-only input,
+# upper half is written at lane-private cells
+_RD_OFFS = [0, W, 2 * W, 3 * W]
+_WR_OFFS = [4 * W, 5 * W, 6 * W, 7 * W]
+
+
+def _raw(rng) -> Raw:
+    ops = []
+    for _ in range(rng.integers(1, 4)):
+        k = rng.integers(0, 6)
+        if k == 0:
+            ops.append(f"IADDI R2, R2, {int(rng.integers(-3, 4))}")
+        elif k == 1:
+            ops.append("IADD R5, R2, R1")
+        elif k == 2:
+            ops.append("XOR R6, R5, R2")
+        elif k == 3:
+            ops.append(f"LDG R5, [R1+{int(rng.choice(_RD_OFFS))}]")
+        elif k == 4:
+            ops.append(f"STG [R1+{int(rng.choice(_WR_OFFS))}], R5")
+        else:
+            ops.append("IADD R2, R2, R5")
+    return Raw(ops)
+
+
+def _cond(rng, pred: int) -> list[str]:
+    reg = rng.choice(["R2", "R5", "R6", "R1"])
+    cmp = rng.choice(["LT", "GT", "EQ", "NE", "GE", "LE"])
+    return [f"ISETP.{cmp} P{pred}, {reg}, {int(rng.integers(-2, 5))}"]
+
+
+def _node(rng, depth: int, loop_level: int) -> "Seq | If | While | Raw":
+    choices = ["raw", "seq"]
+    if depth < 3:
+        choices += ["if", "if", "while"]
+    kind = rng.choice(choices)
+    if kind == "raw":
+        return _raw(rng)
+    if kind == "seq":
+        return Seq([_node(rng, depth, loop_level)
+                    for _ in range(rng.integers(1, 3))])
+    pred = int(rng.integers(0, 2))
+    if kind == "if":
+        has_else = bool(rng.integers(0, 2))
+        return If(cond=_cond(rng, pred), pred=pred,
+                  then_=_node(rng, depth + 1, loop_level),
+                  else_=_node(rng, depth + 1, loop_level) if has_else else None)
+    # while: bounded counter in R{8+loop_level}
+    rc = 8 + loop_level
+    bound = int(rng.integers(1, 4))
+    body = Seq([Raw([f"IADDI R{rc}, R{rc}, 1"]),
+                _node(rng, depth + 1, loop_level + 1)])
+    brk = None
+    if rng.integers(0, 3) == 0:
+        body = Seq([Raw(["ISETP.GT P2, R5, 6"]), body])
+        brk = 2
+    return Seq([Raw([f"MOV R{rc}, 0"]),
+                While(cond=[f"ISETP.LT P{pred}, R{rc}, {bound}"], pred=pred,
+                      body=body, break_pred=brk)])
+
+
+def make_program(seed: int, n_bx: int):
+    rng = np.random.default_rng(seed)
+    ast = Seq([Raw(["LANEID R1", "MOVR R2, R1"]),
+               _node(rng, 0, 0),
+               _node(rng, 0, 0)])
+    cfg = BASE_CFG._replace(n_bx=n_bx)
+    try:
+        prog = compile_structured(ast, cfg)
+    except ValueError:   # BREAK under spill pressure: legitimately rejected
+        return None, cfg
+    mem = rng.integers(0, 8, size=MEM).astype(np.int32)
+    return (prog, mem), cfg
+
+
+CHECK_REGS = [1, 2, 5, 6, 8, 9, 10]
+
+
+@settings(max_examples=120, deadline=None)
+@given(seed=st.integers(0, 10_000), n_bx=st.sampled_from([1, 2, 8]))
+def test_hanoi_matches_scalar_reference(seed, n_bx):
+    built, cfg = make_program(seed, n_bx)
+    if built is None:
+        return
+    prog, mem = built
+    h = run_hanoi(prog, cfg, init_mem=mem)
+    assert not h.deadlocked, "structured programs must not deadlock"
+    assert h.error is None
+    ref = run_reference(prog, cfg, init_mem=mem)
+    np.testing.assert_array_equal(h.regs[:, CHECK_REGS], ref.regs[:, CHECK_REGS])
+    np.testing.assert_array_equal(h.mem, ref.mem)
+    assert h.finished == cfg.full_mask
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_simt_stack_matches_reference(seed):
+    built, cfg = make_program(seed, 8)
+    if built is None:
+        return
+    prog, mem = built
+    s = run_simt_stack(prog, cfg, init_mem=mem)
+    assert not s.deadlocked
+    ref = run_reference(prog, cfg, init_mem=mem)
+    np.testing.assert_array_equal(s.regs[:, CHECK_REGS], ref.regs[:, CHECK_REGS])
+    np.testing.assert_array_equal(s.mem, ref.mem)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_oracle_skip_heuristic_is_correctness_preserving(seed):
+    """Skipping reconvergence (the hardware heuristic, SS IX) may change the
+    schedule but never architectural results on race-free programs.
+
+    The heuristic is only sound where the skipping threads cannot race into
+    a region that reuses the Bx register (the paper observes it 'in some rare
+    occasions' only) — i.e. a trailing loop region, the BFSD shape.  We
+    generate exactly that shape and skip the loop's own BSYNC.
+    """
+    rng = np.random.default_rng(seed)
+    cfg = BASE_CFG
+    ast = Seq([Raw(["LANEID R1", "MOVR R2, R1", "MOV R8, 0"]),
+               While(cond=[f"ISETP.LT P0, R8, {int(rng.integers(1, 5))}"],
+                     pred=0,
+                     body=Seq([Raw(["IADDI R8, R8, 1"]),
+                               _node(rng, 1, 1)]))])
+    try:
+        prog = compile_structured(ast, cfg)
+    except ValueError:       # break-while nested in the loop: rejected shape
+        return
+    mem = rng.integers(0, 8, size=MEM).astype(np.int32)
+    last_bsync = max(pc for pc in range(prog.shape[0])
+                     if prog[pc, 0] == Op.BSYNC)
+    o = run_hanoi(prog, cfg, init_mem=mem,
+                  bsync_skip_pcs=frozenset([last_bsync]))
+    assert not o.deadlocked
+    ref = run_reference(prog, cfg, init_mem=mem)
+    np.testing.assert_array_equal(o.regs[:, CHECK_REGS], ref.regs[:, CHECK_REGS])
+    np.testing.assert_array_equal(o.mem, ref.mem)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trace_invariants(seed):
+    built, cfg = make_program(seed, 2)
+    if built is None:
+        return
+    prog, mem = built
+    h = run_hanoi(prog, cfg, init_mem=mem)
+    L = prog.shape[0]
+    for pc, m in h.trace:
+        assert 0 <= pc < L
+        assert 0 < m <= cfg.full_mask, "issued with an empty mask"
+    # every thread must issue the final EXIT exactly once (possibly in
+    # different subsets); count per-lane EXIT issues
+    exits = np.zeros(W, np.int64)
+    for pc, m in h.trace:
+        if prog[pc, 0] == Op.EXIT:
+            for t in range(W):
+                if m >> t & 1:
+                    exits[t] += 1
+    np.testing.assert_array_equal(exits, np.ones(W, np.int64))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_path_priority_is_correctness_neutral(seed):
+    """The paper: 'correct execution does not depend on which path is
+    prioritized' (SS VI-A) — flip majority-first off and results must hold."""
+    built, cfg = make_program(seed, 8)
+    if built is None:
+        return
+    prog, mem = built
+    a = run_hanoi(prog, cfg, init_mem=mem, majority_first=True)
+    b = run_hanoi(prog, cfg, init_mem=mem, majority_first=False)
+    assert not a.deadlocked and not b.deadlocked
+    np.testing.assert_array_equal(a.regs[:, CHECK_REGS], b.regs[:, CHECK_REGS])
+    np.testing.assert_array_equal(a.mem, b.mem)

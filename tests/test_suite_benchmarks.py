@@ -1,0 +1,104 @@
+"""Behavioral validation of the benchmark suite (Table II analogue) on all
+three machines, plus the timing model's basic sanity."""
+import numpy as np
+import pytest
+
+from repro.core import (MachineConfig, run_hanoi, run_reference,
+                        run_simt_stack, simd_utilization)
+from repro.core.programs import make_suite
+from repro.core.timing import TimingConfig, simulate
+
+CFG = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
+SUITE = make_suite(CFG, datasets=1)
+
+
+@pytest.mark.parametrize("bench", SUITE, ids=lambda b: b.name)
+def test_hanoi_completes(bench):
+    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    assert not r.deadlocked, f"{bench.name} deadlocked on Hanoi"
+    assert r.error is None
+    assert r.finished == CFG.full_mask
+
+
+@pytest.mark.parametrize("bench", [b for b in SUITE if b.race_free],
+                         ids=lambda b: b.name)
+def test_suite_matches_reference(bench):
+    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    ref = run_reference(bench.program, CFG, init_mem=bench.init_mem)
+    np.testing.assert_array_equal(r.mem, ref.mem)
+    assert r.finished == ref.finished
+
+
+@pytest.mark.parametrize("bench", [b for b in SUITE if b.race_free],
+                         ids=lambda b: b.name)
+def test_suite_simt_stack_matches_reference(bench):
+    """Race-free structured programs also complete pre-Volta (no SIMT-induced
+    deadlock without locks)."""
+    r = run_simt_stack(bench.program, CFG, init_mem=bench.init_mem)
+    assert not r.deadlocked
+    ref = run_reference(bench.program, CFG, init_mem=bench.init_mem)
+    np.testing.assert_array_equal(r.mem, ref.mem)
+
+
+def test_histogram_counts():
+    bench = next(b for b in SUITE if b.name.startswith("HIST"))
+    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    assert not r.deadlocked
+    vals = bench.init_mem[:32]
+    expect = np.zeros(CFG.mem_size, np.int64)
+    for v in vals:
+        expect[(v + CFG.mem_size // 2) % CFG.mem_size] += 1
+    got = r.mem[CFG.mem_size // 2:CFG.mem_size // 2 + 8]
+    want = (bench.init_mem + expect)[CFG.mem_size // 2:CFG.mem_size // 2 + 8]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_oracle_skip_changes_trace_not_results():
+    """The BFSD benchmark: the Turing-oracle skips the loop BSYNC, producing
+    a different trace (lower SIMD utilization) but identical results."""
+    bench = next(b for b in SUITE if b.name == "BFSD")
+    hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    oracle = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
+                       bsync_skip_pcs=bench.skip_bsync_pcs)
+    assert not hanoi.deadlocked and not oracle.deadlocked
+    np.testing.assert_array_equal(hanoi.mem, oracle.mem)
+    assert hanoi.trace != oracle.trace, "heuristic must alter the schedule"
+    util_h = simd_utilization(hanoi.trace, CFG.n_threads)
+    util_o = simd_utilization(oracle.trace, CFG.n_threads)
+    assert util_h >= util_o, ("enforcing reconvergence must not lower "
+                              "SIMD utilization (paper SS IX: +31.9%)")
+
+
+def test_timing_model_prefers_reconvergence():
+    """Fig 10 BFSD effect: Hanoi's reconvergence-enforcing trace yields
+    higher thread-IPC than the skipping oracle trace."""
+    bench = next(b for b in SUITE if b.name == "BFSD")
+    hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    oracle = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
+                       bsync_skip_pcs=bench.skip_bsync_pcs)
+    t_h = simulate([hanoi.trace], bench.program, CFG.n_threads)
+    t_o = simulate([oracle.trace], bench.program, CFG.n_threads)
+    assert t_h.simd_utilization >= t_o.simd_utilization
+    assert t_h.ipc >= t_o.ipc
+
+
+def test_timing_model_monotone_in_latency():
+    bench = SUITE[0]
+    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    fast = simulate([r.trace], bench.program, CFG.n_threads,
+                    TimingConfig(memory_latency=2))
+    slow = simulate([r.trace], bench.program, CFG.n_threads,
+                    TimingConfig(memory_latency=200))
+    assert slow.cycles > fast.cycles
+    assert slow.ipc < fast.ipc
+
+
+def test_timing_multi_warp_hides_latency():
+    """More warps per scheduler hide memory latency: cycles grow sublinearly
+    with warp count."""
+    bench = next(b for b in SUITE if b.name.startswith("RBFS"))
+    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    one = simulate([r.trace], bench.program, CFG.n_threads)
+    four = simulate([r.trace] * 4, bench.program, CFG.n_threads)
+    assert four.cycles < 4 * one.cycles
+    assert four.ipc > one.ipc
