@@ -1,70 +1,72 @@
 """Paper-table benchmarks for the Hanoi control-flow engine.
 
+All measurements flow through the unified ``repro.engine`` API:
+
 * Fig 9  — control-flow trace discrepancy (Levenshtein %) Hanoi vs. the
-           Turing-oracle ("hardware") traces across the benchmark suite;
+           Turing-oracle ("hardware") traces across the benchmark suite,
+           via ``Simulator.compare``;
 * Fig 10 — relative IPC difference via the trace-driven timing model,
            including the BFSD outlier (+SIMD-utilization gain);
 * SS IX-A — hardware storage cost vs. a SIMT-Stack (432 B / ~43% claim);
-* SIMD utilization per benchmark (suite-wide);
-* engine throughput: vectorized JAX engine (vmap over warps) vs. the numpy
-  reference interpreter.
+* engine throughput: vectorized JAX mechanism (vmap ``run_batch``) vs. the
+  numpy reference mechanism, warps/second.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import numpy as np
 
-from repro.core import (MachineConfig, hardware_cost_bytes, run_hanoi,
-                        simd_utilization)
+from repro.core import MachineConfig, hardware_cost_bytes
 from repro.core.programs import make_suite
-from repro.core.timing import TimingConfig, ipc_delta, simulate
-from repro.core.trace import discrepancy
+from repro.core.timing import TimingConfig
+from repro.engine import CompareReport, Simulator
 
 CFG = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
+PAIR = ("hanoi", "turing_oracle")
+
+_SIM = Simulator("hanoi")
 
 
+@functools.lru_cache(maxsize=1)
 def _suite():
+    # benchmarks are frozen and engines never mutate the shared program /
+    # init_mem arrays, so one suite instance serves every table
     return make_suite(CFG, datasets=2)
 
 
-def trace_discrepancy_rows() -> list[dict]:
+def compare_report() -> CompareReport:
+    """One engine-API call computes both Fig 9 and Fig 10 inputs."""
+    return _SIM.compare(list(PAIR), _suite(), CFG, pairs=[PAIR],
+                        timing_warps=4, timing_cfg=TimingConfig())
+
+
+def trace_discrepancy_rows(report: CompareReport | None = None) -> list[dict]:
     """Fig 9: per-execution trace discrepancy vs the hardware oracle."""
-    rows = []
-    for bench in _suite():
-        hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-        hw = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
-                       bsync_skip_pcs=bench.skip_bsync_pcs)
-        d = discrepancy(hanoi.trace, hw.trace)
-        rows.append({"bench": bench.name, "family": bench.family,
-                     "discrepancy_pct": 100.0 * d,
-                     "trace_len": len(hw.trace)})
-    return rows
+    report = report or compare_report()
+    families = {b.name: b.family for b in _suite()}
+    return [{"bench": row.program, "family": families[row.program],
+             "discrepancy_pct": row.discrepancy_pct,
+             "trace_len": row.trace_len_b}
+            for row in report.pair(*PAIR)]
 
 
-def ipc_rows() -> list[dict]:
+def ipc_rows(report: CompareReport | None = None) -> list[dict]:
     """Fig 10: relative IPC (trace-driven GTO model) Hanoi vs hardware."""
-    rows = []
-    for bench in _suite():
-        hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-        hw = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
-                       bsync_skip_pcs=bench.skip_bsync_pcs)
-        t_h = simulate([hanoi.trace] * 4, bench.program, CFG.n_threads)
-        t_o = simulate([hw.trace] * 4, bench.program, CFG.n_threads)
-        rows.append({
-            "bench": bench.name,
-            "ipc_hanoi": t_h.ipc, "ipc_hw": t_o.ipc,
-            "ipc_delta_pct": 100.0 * ipc_delta(t_h, t_o),
-            "util_hanoi": t_h.simd_utilization,
-            "util_hw": t_o.simd_utilization,
-        })
-    return rows
+    report = report or compare_report()
+    return [{"bench": row.program,
+             "ipc_hanoi": row.ipc_a, "ipc_hw": row.ipc_b,
+             "ipc_delta_pct": row.ipc_delta_pct,
+             "util_hanoi": row.util_a, "util_hw": row.util_b}
+            for row in report.pair(*PAIR)]
 
 
 def summary() -> dict:
     """The paper's headline numbers on our suite."""
-    dd = trace_discrepancy_rows()
-    ii = ipc_rows()
+    report = compare_report()
+    dd = trace_discrepancy_rows(report)
+    ii = ipc_rows(report)
     zero = sum(1 for r in dd if r["discrepancy_pct"] == 0.0)
     nonzero = [r for r in dd if r["discrepancy_pct"] > 0]
     bfsd_i = next(r for r in ii if r["bench"] == "BFSD")
@@ -93,33 +95,34 @@ def hw_cost_rows() -> list[dict]:
 
 
 def engine_throughput(n_warps: int = 32, reps: int = 3) -> dict:
-    """Vectorized JAX engine vs numpy interpreter, warps/second."""
-    from repro.core.hanoi import run_warps_jax
-    import jax
-    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=2048)
-    from tests.test_property_core import make_program
-    built = None
-    seed = 0
-    while built is None:
-        built, _ = make_program(seed, 8)
-        seed += 1
-    prog, mem = built
-    rng = np.random.default_rng(0)
-    regs = np.zeros((n_warps, cfg.n_threads, cfg.n_regs), np.int32)
-    mems = rng.integers(0, 8, size=(n_warps, cfg.mem_size)).astype(np.int32)
+    """Vectorized JAX mechanism vs numpy mechanism, warps/second.
 
-    st = run_warps_jax(prog, cfg, regs, mems)          # compile
-    jax.block_until_ready(st.regs)
+    Both arms use the same per-warp requests (one randomized memory image
+    per warp).  The JAX arm is one ``run_batch`` call (the vmap path,
+    including result materialization — the price a service actually pays);
+    the numpy arm runs sequentially via ``run`` so the ratio stays
+    comparable to the historical single-threaded interpreter numbers
+    rather than measuring the thread-pool fan-out.
+    """
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=2048)
+    bench = next(b for b in make_suite(cfg, datasets=1) if b.name == "GAUS0")
+    rng = np.random.default_rng(0)
+    from repro.engine import SimRequest
+    reqs = [SimRequest(program=bench.program, cfg=cfg,
+                       init_mem=rng.integers(0, 8, size=cfg.mem_size)
+                       .astype(np.int32),
+                       record_trace=False, name=f"warp{w}")
+            for w in range(n_warps)]
+
+    _SIM.run_batch(reqs, mechanism="hanoi_jax")            # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        st = run_warps_jax(prog, cfg, regs, mems)
-        jax.block_until_ready(st.regs)
+        _SIM.run_batch(reqs, mechanism="hanoi_jax")
     jax_s = (time.perf_counter() - t0) / reps
 
     t0 = time.perf_counter()
-    for w in range(n_warps):
-        run_hanoi(prog, cfg, init_regs=regs[w], init_mem=mems[w],
-                  record_trace=False)
+    for req in reqs:
+        _SIM.run(req, mechanism="hanoi")
     np_s = time.perf_counter() - t0
     return {"n_warps": n_warps,
             "jax_warps_per_s": n_warps / jax_s,

@@ -1,7 +1,10 @@
 """Kernel benchmarks: divergence-aware tile census per assigned-arch
-attention pattern (the Hanoi EMPTY/PARTIAL/FULL saving at MXU granularity)
-and interpret-mode wall times vs the jnp reference (correct-path costs; TPU
-wall times are a dry-run quantity here, see EXPERIMENTS.md SS Roofline)."""
+attention pattern (the Hanoi EMPTY/PARTIAL/FULL saving at MXU granularity),
+warp-level SIMD utilization per control-flow mechanism (via the unified
+``repro.engine`` API — the same EMPTY/PARTIAL/FULL economics one level
+down), and interpret-mode wall times vs the jnp reference (correct-path
+costs; TPU wall times are a dry-run quantity here, see EXPERIMENTS.md
+SS Roofline)."""
 from __future__ import annotations
 
 import time
@@ -26,6 +29,25 @@ def tile_census_rows() -> list[dict]:
     for name, sq, sk, causal, w in cases:
         st = tile_stats(sq, sk, causal=causal, window=w, bq=128, bk=128)
         rows.append({"case": name, **st})
+    return rows
+
+
+def mechanism_utilization_rows() -> list[dict]:
+    """Warp-level SIMD utilization of each control-flow mechanism on the
+    divergence-heavy BFS benchmark — the lane-granularity analogue of the
+    tile census above, computed through the unified engine API."""
+    from repro.core import MachineConfig
+    from repro.core.programs import make_suite
+    from repro.engine import Simulator, available_mechanisms
+
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+    bench = next(b for b in make_suite(cfg, datasets=1) if b.name == "BFSD")
+    sim = Simulator()
+    rows = []
+    for mech in available_mechanisms():
+        res = sim.run(bench, cfg, mechanism=mech)
+        rows.append({"mechanism": mech, "utilization": res.utilization,
+                     "steps": res.steps, "status": res.status.value})
     return rows
 
 
@@ -75,6 +97,10 @@ def main() -> None:
         print(f"  {r['case']:38s} kept={r['flops_kept_frac']:6.1%} "
               f"(empty={r['empty']}, partial={r['partial']}, "
               f"full={r['full']})")
+    print("== SIMD utilization per mechanism (BFSD, repro.engine) ==")
+    for r in mechanism_utilization_rows():
+        print(f"  {r['mechanism']:14s} util={r['utilization']:6.1%} "
+              f"steps={r['steps']:5d} status={r['status']}")
     print("== kernel wall times (CPU; interpret mode for Pallas) ==")
     for r in kernel_timing_rows():
         print(f"  {r['kernel']:28s} {r['us']:12.0f} us")

@@ -1,10 +1,18 @@
-"""Dry-run a single (arch x shape x mesh) cell and print its roofline terms.
+"""Dry-run a single cell and print its headline terms.
 
-This is the public API the EXPERIMENTS.md tables are built from.  Must be a
-fresh process (the 512-device flag is set before jax import).
+Two cell families share this entry point:
+
+* roofline cells — one (arch x shape x mesh) combination through the HLO
+  dry-run path (the EXPERIMENTS.md tables).  Must be a fresh process (the
+  512-device flag is set before jax import).
+* control-flow cells (``--cf-bench NAME``) — one (benchmark x mechanism
+  pair) through the unified ``repro.engine`` API: trace discrepancy, IPC
+  delta and SIMD utilization for that single cell.
 
 Run:  PYTHONPATH=src python examples/dryrun_cell.py --arch gemma3-4b \\
           --shape decode_32k [--multi-pod]
+      PYTHONPATH=src python examples/dryrun_cell.py --cf-bench BFSD \\
+          [--cf-mechanisms hanoi,turing_oracle]
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
@@ -12,12 +20,47 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 
 
+def run_cf_cell(bench_name: str, mechanisms: list[str]) -> None:
+    from repro.core import MachineConfig
+    from repro.core.programs import make_suite
+    from repro.engine import Simulator
+
+    cfg = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
+    suite = make_suite(cfg)
+    bench = next((b for b in suite if b.name == bench_name), None)
+    if bench is None:
+        raise SystemExit(f"unknown benchmark {bench_name!r}; available: "
+                         + ", ".join(b.name for b in suite))
+    a, b = mechanisms
+    report = Simulator().compare(mechanisms, [bench], cfg, pairs=[(a, b)])
+    row = report.pair(a, b)[0]
+    print(f"\n[example] control-flow cell {bench_name} x ({a} vs {b})")
+    print(f"  status         {row.status_a} / {row.status_b}")
+    print(f"  discrepancy    {row.discrepancy_pct:8.2f} %")
+    print(f"  ipc            {row.ipc_a:8.3f} vs {row.ipc_b:8.3f} "
+          f"({row.ipc_delta_pct:+.1f}%)")
+    print(f"  simd util      {row.util_a:8.3f} vs {row.util_b:8.3f}")
+    print(f"  trace lengths  {row.trace_len_a} vs {row.trace_len_b}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--cf-bench", default=None,
+                    help="run a control-flow cell for this benchmark name "
+                         "(e.g. BFSD) instead of a roofline cell")
+    ap.add_argument("--cf-mechanisms", default="hanoi,turing_oracle",
+                    help="comma-separated mechanism pair for --cf-bench")
     args = ap.parse_args()
+
+    if args.cf_bench:
+        mechs = [m.strip() for m in args.cf_mechanisms.split(",")]
+        if len(mechs) != 2:
+            raise SystemExit("--cf-mechanisms needs exactly two names")
+        run_cf_cell(args.cf_bench, mechs)
+        return
 
     from repro.launch.dryrun import run_cell
     rec = run_cell(args.arch, args.shape, args.multi_pod)

@@ -1,5 +1,8 @@
 """Quickstart: the paper's core artifacts in 60 seconds.
 
+Everything runs through the unified ``repro.engine`` API — one Simulator,
+any mechanism by name:
+
 1. assemble the Fig 3/7 spinlock and watch pre-Volta (SIMT-Stack) deadlock
    while Hanoi completes it via YIELD + late BSYNC;
 2. reproduce the Fig 6 early-reconvergence-with-BREAK walkthrough;
@@ -8,46 +11,40 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (MachineConfig, disassemble, run_hanoi,
-                        run_simt_stack, simd_utilization)
-from repro.core.programs import (fig6_program, make_suite, spinlock_program)
-from repro.core.trace import discrepancy
+from repro.core import MachineConfig, disassemble
+from repro.core.programs import fig6_program, make_suite, spinlock_program
+from repro.engine import Simulator, SimStatus
 
 W = 8
 CFG = MachineConfig(n_threads=W, max_steps=40_000)
+sim = Simulator("hanoi")
 
 # --- 1. spinlock: pre-Volta deadlock vs Hanoi ------------------------------
 prog = spinlock_program()
 print("=== spinlock (Fig 3/7) ===")
 print(disassemble(prog))
-pre = run_simt_stack(prog, CFG)
-post = run_hanoi(prog, CFG)
-print(f"\npre-Volta SIMT-Stack: deadlocked={pre.deadlocked} "
+pre = sim.run(prog, CFG, mechanism="simt_stack")
+post = sim.run(prog, CFG, mechanism="hanoi")
+print(f"\npre-Volta SIMT-Stack: status={pre.status.value} "
       f"(critical sections completed: {int(pre.mem[1])}/{W})")
-print(f"Hanoi:                deadlocked={post.deadlocked} "
+print(f"Hanoi:                status={post.status.value} "
       f"counter={int(post.mem[1])}/{W} (mutual exclusion held)")
-assert pre.deadlocked and not post.deadlocked
+assert pre.status is SimStatus.OUT_OF_FUEL and post.status is SimStatus.OK
 
 # --- 2. early reconvergence with BREAK (Fig 6) ------------------------------
-cfg4 = MachineConfig(n_threads=4, max_steps=512)
-r = run_hanoi(fig6_program(), cfg4)
+r = sim.run(fig6_program(), MachineConfig(n_threads=4, max_steps=512))
 print("\n=== Fig 6: BREAK enables reconvergence BEFORE the IPDom ===")
-print(f"completed: {not r.deadlocked}; "
+print(f"completed: {r.ok}; "
       f"early-reconverged mask seen in trace: "
       f"{any(m == 0b1110 for _, m in r.trace)}")
 
 # --- 3. trace discrepancy vs the hardware heuristic (Fig 9) -----------------
-bench = next(b for b in make_suite(MachineConfig(n_threads=32,
-                                                 max_steps=60_000))
-             if b.name == "BFSD")
-hanoi = run_hanoi(bench.program, MachineConfig(n_threads=32,
-                                               max_steps=60_000),
-                  init_mem=bench.init_mem)
-hw = run_hanoi(bench.program, MachineConfig(n_threads=32, max_steps=60_000),
-               init_mem=bench.init_mem,
-               bsync_skip_pcs=bench.skip_bsync_pcs)
+CFG32 = MachineConfig(n_threads=32, max_steps=60_000)
+bench = next(b for b in make_suite(CFG32) if b.name == "BFSD")
+report = sim.compare(["hanoi", "turing_oracle"], [bench], CFG32,
+                     pairs=[("hanoi", "turing_oracle")], timing=False)
+row = report.pair("hanoi", "turing_oracle")[0]
 print("\n=== Fig 9/10: BFSD — Hanoi enforces reconvergence, hardware skips ===")
-print(f"trace discrepancy: {100 * discrepancy(hanoi.trace, hw.trace):.1f}%")
-print(f"SIMD utilization:  hanoi={simd_utilization(hanoi.trace, 32):.3f} "
-      f"hw={simd_utilization(hw.trace, 32):.3f}")
+print(f"trace discrepancy: {row.discrepancy_pct:.1f}%")
+print(f"SIMD utilization:  hanoi={row.util_a:.3f} hw={row.util_b:.3f}")
 print("\nquickstart OK")

@@ -1,11 +1,18 @@
 # The paper's primary contribution: Turing control-flow-instruction semantics
 # and the Hanoi control-flow-management mechanism, as executable JAX/numpy
 # models, plus the analysis stack around them (CFG/IPDom, trace diff, timing).
+#
+# NOTE: the engine entry points (run_hanoi, run_simt_stack, run_dual_path)
+# are still importable from this package but deprecated — `repro.engine` is
+# the canonical simulation API (Mechanism registry + Simulator façade with
+# run/run_batch/compare).  The shims below keep old imports working for one
+# release while emitting DeprecationWarning.
+import warnings as _warnings
+
 from .isa import (CONTROL_OPS, Instr, MachineConfig, Op, decode_program,
                   encode_program, hardware_cost_bytes)
 from .asm import AsmError, assemble, disassemble
-from .interp import (RunResult, popcount, run_hanoi, run_reference,
-                     run_simt_stack, simd_utilization)
+from .interp import (RunResult, popcount, run_reference, simd_utilization)
 from .cfg import build_cfg, immediate_postdominators
 from .trace import discrepancy, levenshtein, trace_tokens
 from .structured import (If, Raw, Seq, While, compile_structured, emit_text,
@@ -16,6 +23,35 @@ __all__ = [
     "RunResult", "Seq", "While", "assemble", "build_cfg", "compile_structured",
     "decode_program", "disassemble", "discrepancy", "emit_text",
     "encode_program", "hardware_cost_bytes", "immediate_postdominators",
-    "levenshtein", "popcount", "region_depth", "run_hanoi", "run_reference",
-    "run_simt_stack", "simd_utilization", "trace_tokens",
+    "levenshtein", "popcount", "region_depth", "run_dual_path", "run_hanoi",
+    "run_reference", "run_simt_stack", "simd_utilization", "trace_tokens",
 ]
+
+# --------------------------------------------------------------------------
+# deprecation shims: engine-specific entry points moved behind repro.engine
+# --------------------------------------------------------------------------
+
+_DEPRECATED = {
+    "run_hanoi": ("repro.core.interp", "run_hanoi",
+                  "Simulator('hanoi').run(...)"),
+    "run_simt_stack": ("repro.core.interp", "run_simt_stack",
+                       "Simulator('simt_stack').run(...)"),
+    "run_dual_path": ("repro.core.dualpath", "run_dual_path",
+                      "Simulator('dualpath').run(...)"),
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        mod_name, attr, hint = _DEPRECATED[name]
+        _warnings.warn(
+            f"importing {name!r} from repro.core is deprecated and will be "
+            f"removed in a future release; use repro.engine ({hint})",
+            DeprecationWarning, stacklevel=2)
+        import importlib
+        return getattr(importlib.import_module(mod_name), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_DEPRECATED))

@@ -145,4 +145,4 @@ def run_dual_path(program: np.ndarray,
 
     deadlocked = (finished & FULL) != FULL or fuel <= 0
     return RunResult(st.regs, st.preds, st.mem, finished, steps, deadlocked,
-                     None, trace)
+                     None, trace, fuel_left=max(0, fuel))

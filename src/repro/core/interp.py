@@ -72,6 +72,15 @@ class RunResult:
     deadlocked: bool            # fuel exhausted or threads stuck waiting
     error: str | None           # structural error (Bx exhaustion, ...)
     trace: list[tuple[int, int]] = field(default_factory=list)  # (pc, mask)
+    fuel_left: int = -1         # scheduler-slot budget remaining (-1: unknown)
+
+    @property
+    def out_of_fuel(self) -> bool:
+        """True when the run stopped because the fuel budget expired (as
+        opposed to a structural deadlock with fuel to spare).  The trace is
+        truncated at the last fueled slot — identical across the numpy and
+        JAX engines (property-tested)."""
+        return self.fuel_left == 0
 
     def trace_tokens(self) -> np.ndarray:
         """Encode the control-flow trace as int64 tokens for Levenshtein."""
@@ -373,7 +382,7 @@ def run_hanoi(program: np.ndarray,
     if fuel <= 0:
         deadlocked = True
     return RunResult(st.regs, st.preds, st.mem, finished, steps, deadlocked,
-                     error, trace)
+                     error, trace, fuel_left=max(0, fuel))
 
 
 # --------------------------------------------------------------------------
@@ -461,7 +470,7 @@ def run_simt_stack(program: np.ndarray,
 
     deadlocked = (finished & FULL) != FULL or fuel <= 0
     return RunResult(st.regs, st.preds, st.mem, finished, steps, deadlocked,
-                     error, trace)
+                     error, trace, fuel_left=max(0, fuel))
 
 
 # --------------------------------------------------------------------------
@@ -490,6 +499,7 @@ def run_reference(program: np.ndarray,
     finished = 0
     deadlocked = False
     steps = 0
+    fuel_left = cfg.max_steps
     for t in range(W):
         r = run_hanoi(program, scfg, init_regs=regs[t:t + 1], init_mem=mem,
                       lane_ids=np.array([t], _I32), record_trace=False)
@@ -498,7 +508,8 @@ def run_reference(program: np.ndarray,
         mem = r.mem
         steps += r.steps
         deadlocked |= r.deadlocked
+        fuel_left = min(fuel_left, r.fuel_left)
         if r.finished:
             finished |= (1 << t)
     return RunResult(out_regs, out_preds, mem, finished, steps, deadlocked,
-                     None, [])
+                     None, [], fuel_left=fuel_left)

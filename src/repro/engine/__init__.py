@@ -1,0 +1,73 @@
+"""repro.engine — the unified control-flow simulation API.
+
+This package is the **canonical entry point** for running SASS-lite warps
+under any control-flow-management mechanism.  It replaces the four ad-hoc
+engine entry points (``interp.run_hanoi``, ``interp.run_simt_stack``,
+``dualpath.run_dual_path`` and the JAX ``hanoi`` module) with one façade,
+one request/result schema, and one trace format.
+
+Quick start
+-----------
+::
+
+    from repro.core.programs import make_suite
+    from repro.engine import MachineConfig, Simulator
+
+    cfg = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
+    sim = Simulator("hanoi")
+
+    # one warp, one mechanism
+    res = sim.run(make_suite(cfg)[0], cfg)
+    print(res.status, res.utilization, len(res.trace))
+
+    # the paper's Fig 9/10 evaluation in one call
+    report = sim.compare(["hanoi", "turing_oracle"], make_suite(cfg), cfg)
+    print(report.mean_discrepancy("hanoi", "turing_oracle"))
+
+    # batched execution: one vmap over warps+programs on the JAX engine
+    results = sim.run_batch(make_suite(cfg), cfg, mechanism="hanoi_jax")
+
+Layout
+------
+* :mod:`repro.engine.types`     — frozen :class:`SimRequest` /
+  :class:`SimResult` with the normalized :class:`SimStatus`
+  (``OK`` / ``OUT_OF_FUEL`` / ``DEADLOCK`` / ``ERROR``);
+* :mod:`repro.engine.registry`  — the :class:`Mechanism` registry and the
+  :func:`register_mechanism` decorator for third-party mechanisms;
+* :mod:`repro.engine.adapters`  — the five built-ins: ``simt_stack``,
+  ``hanoi``, ``turing_oracle``, ``dualpath``, ``hanoi_jax``;
+* :mod:`repro.engine.sinks`     — pluggable :class:`TraceSink` consumers
+  (:class:`MemorySink`, :class:`JsonlSink`, :class:`RingBufferSink`);
+* :mod:`repro.engine.simulator` — the :class:`Simulator` façade with
+  ``run`` / ``run_batch`` / ``compare``.
+
+Adding a mechanism
+------------------
+::
+
+    from repro.engine import SimRequest, SimResult, register_mechanism
+
+    @register_mechanism("darm", description="divergence-melding prototype")
+    def run_darm(req: SimRequest) -> SimResult:
+        ...
+
+Candidate future mechanisms (see ROADMAP): DARM-style branch melding,
+decoupled control flow, and per-SM multi-warp interleaving models.
+"""
+from repro.core.isa import MachineConfig
+
+from .registry import (Mechanism, available_mechanisms, get_mechanism,
+                       iter_mechanisms, register_mechanism,
+                       unregister_mechanism)
+from .sinks import JsonlSink, MemorySink, RingBufferSink, TraceSink
+from .types import SimRequest, SimResult, SimStatus, classify_status
+from .simulator import (CompareReport, CompareRow, Simulator, as_request)
+from . import adapters as _adapters            # registers the built-ins
+
+__all__ = [
+    "CompareReport", "CompareRow", "JsonlSink", "MachineConfig", "Mechanism",
+    "MemorySink", "RingBufferSink", "SimRequest", "SimResult", "SimStatus",
+    "Simulator", "TraceSink", "as_request", "available_mechanisms",
+    "classify_status", "get_mechanism", "iter_mechanisms",
+    "register_mechanism", "unregister_mechanism",
+]

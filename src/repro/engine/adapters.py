@@ -1,0 +1,218 @@
+"""Built-in mechanism adapters: existing engines -> normalized SimResult.
+
+Five mechanisms ship with the engine (the paper's comparable family plus
+the Dual-Path comparison point and the TPU-vectorized engine):
+
+==============  =======  ====================================================
+name            backend  model
+==============  =======  ====================================================
+simt_stack      numpy    pre-Volta SIMT-Stack, IPDom reconvergence (SS II)
+hanoi           numpy    the paper's Hanoi mechanism (SS VII)
+turing_oracle   numpy    Hanoi + the runtime skip heuristic (SS IX); consumes
+                         ``SimRequest.bsync_skip_pcs``
+dualpath        numpy    Dual-Path execution model (Rhu & Erez, HPCA'13)
+hanoi_jax       jax      Hanoi as a JIT/vmap JAX state machine with the
+                         native batched runner.  Drop-in for ``hanoi``:
+                         it *ignores* ``bsync_skip_pcs`` (use the low-level
+                         ``repro.core.hanoi.run_hanoi_jax`` for oracle-mode
+                         JAX runs)
+==============  =======  ====================================================
+
+Each adapter funnels through :func:`~repro.engine.types.classify_status`, so
+``SimResult.status`` means the same thing no matter which engine produced it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.interp import RunResult, run_hanoi, run_simt_stack, \
+    simd_utilization
+from repro.core.dualpath import run_dual_path
+
+from .registry import register_mechanism
+from .types import SimRequest, SimResult, classify_status
+
+__all__ = ["result_from_runresult"]
+
+
+def result_from_runresult(mechanism: str, r: RunResult, req: SimRequest,
+                          wall_time_s: float = 0.0) -> SimResult:
+    """Map a legacy numpy ``RunResult`` onto the normalized schema."""
+    cfg = req.resolved_cfg()
+    trace = tuple(r.trace)
+    return SimResult(
+        mechanism=mechanism,
+        status=classify_status(finished=r.finished, full_mask=cfg.full_mask,
+                               fuel_left=r.fuel_left, error=r.error),
+        regs=np.asarray(r.regs), preds=np.asarray(r.preds),
+        mem=np.asarray(r.mem), finished=int(r.finished), steps=int(r.steps),
+        fuel_left=int(r.fuel_left), trace=trace,
+        utilization=simd_utilization(r.trace, cfg.n_threads),
+        error=r.error, wall_time_s=wall_time_s)
+
+
+# ---------------------------------------------------------------------------
+# numpy mechanisms
+# ---------------------------------------------------------------------------
+
+@register_mechanism(
+    "hanoi", backend="numpy", tags=("paper", "reference"),
+    description="Hanoi WS/REC-stack mechanism (paper SS VII), numpy "
+                "reference interpreter")
+def _run_hanoi(req: SimRequest) -> SimResult:
+    cfg = req.resolved_cfg()
+    t0 = time.perf_counter()
+    r = run_hanoi(req.program, cfg, init_regs=req.init_regs,
+                  init_mem=req.init_mem, lane_ids=req.lane_ids,
+                  active0=req.active0, majority_first=req.majority_first,
+                  record_trace=req.record_trace)
+    return result_from_runresult("hanoi", r, req, time.perf_counter() - t0)
+
+
+@register_mechanism(
+    "turing_oracle", backend="numpy", uses_skip_pcs=True, tags=("paper",),
+    description="Hanoi plus the Turing runtime skip heuristic (paper SS IX);"
+                " skips reconvergence at SimRequest.bsync_skip_pcs")
+def _run_turing_oracle(req: SimRequest) -> SimResult:
+    cfg = req.resolved_cfg()
+    t0 = time.perf_counter()
+    r = run_hanoi(req.program, cfg, init_regs=req.init_regs,
+                  init_mem=req.init_mem, lane_ids=req.lane_ids,
+                  active0=req.active0, majority_first=req.majority_first,
+                  bsync_skip_pcs=frozenset(req.bsync_skip_pcs),
+                  record_trace=req.record_trace)
+    return result_from_runresult("turing_oracle", r, req,
+                                 time.perf_counter() - t0)
+
+
+@register_mechanism(
+    "simt_stack", backend="numpy", tags=("paper", "baseline"),
+    description="pre-Volta SIMT-Stack with compile-time IPDom reconvergence "
+                "(paper SS II)")
+def _run_simt_stack(req: SimRequest) -> SimResult:
+    cfg = req.resolved_cfg()
+    t0 = time.perf_counter()
+    r = run_simt_stack(req.program, cfg, init_regs=req.init_regs,
+                       init_mem=req.init_mem, lane_ids=req.lane_ids,
+                       record_trace=req.record_trace)
+    return result_from_runresult("simt_stack", r, req,
+                                 time.perf_counter() - t0)
+
+
+@register_mechanism(
+    "dualpath", backend="numpy", tags=("related-work",),
+    description="Dual-Path execution model (Rhu & Erez, HPCA'13), the "
+                "paper's SS X comparison point")
+def _run_dualpath(req: SimRequest) -> SimResult:
+    cfg = req.resolved_cfg()
+    t0 = time.perf_counter()
+    r = run_dual_path(req.program, cfg, init_regs=req.init_regs,
+                      init_mem=req.init_mem, lane_ids=req.lane_ids,
+                      record_trace=req.record_trace)
+    return result_from_runresult("dualpath", r, req,
+                                 time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# vectorized JAX mechanism (lazy import: keep numpy-only paths jax-free)
+# ---------------------------------------------------------------------------
+
+_PAD_QUANTUM = 32      # pad program length up to a multiple -> fewer recompiles
+
+
+def _padded_len(n: int) -> int:
+    return -(-n // _PAD_QUANTUM) * _PAD_QUANTUM
+
+
+def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
+    from repro.core.hanoi import ERR_NO_FREE_BX, state_trace
+    cfg = req.resolved_cfg()
+    err_flags = int(state.error)
+    error = ("WARPSYNC: no free Bx register"
+             if err_flags & ERR_NO_FREE_BX else None)
+    trace = tuple(state_trace(state)) if req.record_trace else ()
+    fuel_left = int(state.fuel)
+    return SimResult(
+        mechanism="hanoi_jax",
+        status=classify_status(finished=int(state.finished),
+                               full_mask=cfg.full_mask,
+                               fuel_left=fuel_left, error=error),
+        regs=np.asarray(state.regs), preds=np.asarray(state.preds),
+        mem=np.asarray(state.mem), finished=int(state.finished),
+        steps=int(state.steps), fuel_left=fuel_left, trace=trace,
+        utilization=simd_utilization(list(trace), cfg.n_threads),
+        error=error, wall_time_s=wall_time_s)
+
+
+def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
+    """Native batched execution: vmap over warps AND over (padded) programs.
+
+    All requests must share cfg / majority_first / active0=None (the
+    Simulator checks homogeneity before dispatching here).  Programs of
+    different lengths are padded with unreachable EXITs to one shape so a
+    single compiled executable serves the whole batch.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.hanoi import _run, init_state
+    from repro.core.isa import Op
+
+    cfg = reqs[0].resolved_cfg()
+    majority_first = reqs[0].majority_first
+    W = cfg.n_threads
+    L = _padded_len(max(int(np.asarray(r.program).shape[0]) for r in reqs))
+
+    progs = np.zeros((len(reqs), L, 8), np.int32)
+    progs[:, :, 0] = int(Op.EXIT)                      # unreachable pad
+    skips = np.zeros((len(reqs), L), bool)             # hanoi: no oracle skips
+    regs = np.zeros((len(reqs), W, cfg.n_regs), np.int32)
+    mems = np.zeros((len(reqs), cfg.mem_size), np.int32)
+    lanes = np.broadcast_to(np.arange(W, dtype=np.int32),
+                            (len(reqs), W)).copy()
+    for i, r in enumerate(reqs):
+        p = np.asarray(r.program, np.int32)
+        progs[i, :p.shape[0]] = p
+        if r.init_regs is not None:
+            regs[i] = np.asarray(r.init_regs, np.int32).reshape(W, cfg.n_regs)
+        if r.init_mem is not None:
+            mems[i] = np.asarray(r.init_mem, np.int32).reshape(cfg.mem_size)
+        if r.lane_ids is not None:
+            lanes[i] = np.asarray(r.lane_ids, np.int32).reshape(W)
+
+    def one(prog, skip, reg, mem, lane):
+        st = init_state(L, cfg, init_regs=reg, init_mem=mem, lane_ids=lane)
+        return _run(prog, st, skip, cfg, majority_first)
+
+    t0 = time.perf_counter()
+    states = jax.vmap(one)(jnp.asarray(progs), jnp.asarray(skips),
+                           jnp.asarray(regs), jnp.asarray(mems),
+                           jnp.asarray(lanes))
+    jax.block_until_ready(states.regs)
+    wall = (time.perf_counter() - t0) / max(1, len(reqs))
+    per_warp = [jax.tree_util.tree_map(lambda x, i=i: x[i], states)
+                for i in range(len(reqs))]
+    return [_jax_result(r, st, wall) for r, st in zip(reqs, per_warp)]
+
+
+@register_mechanism(
+    "hanoi_jax", backend="jax",
+    batch_runner=_run_hanoi_jax_batch, tags=("paper", "vectorized"),
+    description="Hanoi as a JIT-compiled, vmap-batched JAX state machine "
+                "(TPU-native); bit-identical to the numpy reference. "
+                "Ignores bsync_skip_pcs — drop-in for 'hanoi'; use the "
+                "low-level run_hanoi_jax for oracle-mode batches")
+def _run_hanoi_jax(req: SimRequest) -> SimResult:
+    from repro.core.hanoi import run_hanoi_jax
+    cfg = req.resolved_cfg()
+    t0 = time.perf_counter()
+    state = run_hanoi_jax(
+        req.program, cfg, init_regs=req.init_regs, init_mem=req.init_mem,
+        lane_ids=req.lane_ids, active0=req.active0,
+        majority_first=req.majority_first,
+        pad_to=_padded_len(int(np.asarray(req.program).shape[0])))
+    import jax
+    jax.block_until_ready(state.regs)
+    return _jax_result(req, state, time.perf_counter() - t0)

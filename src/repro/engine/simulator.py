@@ -1,0 +1,282 @@
+"""The Simulator façade: one entry point over every registered mechanism.
+
+``Simulator.run`` executes one request, ``run_batch`` many (vmap-batched on
+the JAX engine; sequential — or opt-in thread-pooled — on the numpy
+engines), and ``compare`` runs
+the same programs under several mechanisms and reports per-pair trace
+discrepancy and IPC deltas — the paper's Fig 9 / Fig 10 evaluation as a
+one-call API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.isa import MachineConfig
+from repro.core.timing import TimingConfig, ipc_delta, simulate
+from repro.core.trace import discrepancy
+
+from .registry import Mechanism, get_mechanism
+from .sinks import TraceSink
+from .types import SimRequest, SimResult
+
+ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
+
+
+def as_request(program: ProgramLike, cfg: MachineConfig | None = None,
+               **kw) -> SimRequest:
+    """Coerce an ndarray / Benchmark / SimRequest into a SimRequest.
+
+    A SimRequest passes through untouched unless ``cfg`` or request kwargs
+    are given, in which case they override the corresponding fields (so
+    ``run(req, fuel=3)`` re-budgets an existing request instead of silently
+    ignoring the override).
+    """
+    if isinstance(program, SimRequest):
+        if cfg is None and not kw:
+            return program
+        if cfg is not None:
+            kw.setdefault("cfg", cfg)
+        return dataclasses.replace(program, **kw)
+    if hasattr(program, "program"):          # programs.Benchmark duck-type
+        b = program
+        fields = dict(program=np.asarray(b.program),
+                      cfg=cfg or MachineConfig(),
+                      init_mem=getattr(b, "init_mem", None),
+                      bsync_skip_pcs=tuple(getattr(b, "skip_bsync_pcs", ())),
+                      name=getattr(b, "name", ""))
+        fields.update(kw)                    # overrides win, never collide
+        return SimRequest(**fields)
+    return SimRequest(program=np.asarray(program),
+                      cfg=cfg or MachineConfig(), **kw)
+
+
+@dataclass(frozen=True)
+class CompareRow:
+    """One (program, mechanism pair) comparison cell."""
+
+    program: str
+    mech_a: str
+    mech_b: str
+    discrepancy: float           # Levenshtein(trace_a, trace_b)/len(trace_b)
+    ipc_a: float
+    ipc_b: float
+    ipc_delta: float             # (ipc_a - ipc_b) / ipc_b
+    util_a: float
+    util_b: float
+    status_a: str
+    status_b: str
+    trace_len_a: int
+    trace_len_b: int
+
+    @property
+    def discrepancy_pct(self) -> float:
+        return 100.0 * self.discrepancy
+
+    @property
+    def ipc_delta_pct(self) -> float:
+        return 100.0 * self.ipc_delta
+
+
+@dataclass(frozen=True)
+class CompareReport:
+    """All pairwise rows plus the per-mechanism raw results."""
+
+    mechanisms: tuple[str, ...]
+    rows: tuple[CompareRow, ...]
+    results: dict = field(default_factory=dict)   # (program, mech) -> SimResult
+
+    def pair(self, mech_a: str, mech_b: str) -> list[CompareRow]:
+        """Rows for the ordered pair; raises KeyError for a pair that was
+        never computed (a typo or swapped order would otherwise read as a
+        perfect 0.0-discrepancy match)."""
+        rows = [r for r in self.rows
+                if r.mech_a == mech_a and r.mech_b == mech_b]
+        if not rows:
+            known = sorted({(r.mech_a, r.mech_b) for r in self.rows})
+            raise KeyError(f"no comparison rows for pair ({mech_a!r}, "
+                           f"{mech_b!r}); computed pairs: {known}")
+        return rows
+
+    def mean_discrepancy(self, mech_a: str, mech_b: str) -> float:
+        return float(np.mean([r.discrepancy
+                              for r in self.pair(mech_a, mech_b)]))
+
+    def mean_abs_ipc_delta(self, mech_a: str, mech_b: str) -> float:
+        return float(np.mean([abs(r.ipc_delta)
+                              for r in self.pair(mech_a, mech_b)]))
+
+
+class Simulator:
+    """Façade over the mechanism registry.
+
+    >>> sim = Simulator("hanoi")
+    >>> res = sim.run(program, cfg=MachineConfig(n_threads=8))
+    >>> res.status
+    <SimStatus.OK: 'ok'>
+
+    A default mechanism is chosen at construction; ``run``/``run_batch``
+    accept ``mechanism=`` overrides, and ``compare`` takes an explicit list.
+    A :class:`~repro.engine.sinks.TraceSink` attached at construction (or
+    per call) receives every normalized trace.
+
+    ``max_workers`` opts numpy-mechanism batches into a thread pool.  The
+    default (None) runs them sequentially: the reference interpreters are
+    per-slot Python loops over tiny arrays, so they hold the GIL and a pool
+    only adds contention — measured slower than sequential on the paper
+    suite.  The knob exists for mechanisms that genuinely release the GIL.
+    """
+
+    def __init__(self, mechanism: str = "hanoi", *,
+                 sink: TraceSink | None = None,
+                 max_workers: int | None = None) -> None:
+        self._default = get_mechanism(mechanism).name   # validate eagerly
+        self._sink = sink
+        self._max_workers = max_workers
+
+    @property
+    def mechanism(self) -> str:
+        return self._default
+
+    # -- single run ---------------------------------------------------------
+
+    def run(self, program: ProgramLike, cfg: MachineConfig | None = None, *,
+            mechanism: str | None = None, sink: TraceSink | None = None,
+            **request_kw) -> SimResult:
+        mech = get_mechanism(mechanism or self._default)
+        req = as_request(program, cfg, **request_kw)
+        result = mech(req)
+        self._feed_sink(sink or self._sink, mech, req, result)
+        return result
+
+    # -- batched run --------------------------------------------------------
+
+    def run_batch(self, programs: Sequence[ProgramLike],
+                  cfg: MachineConfig | None = None, *,
+                  mechanism: str | None = None, sink: TraceSink | None = None,
+                  **request_kw) -> list[SimResult]:
+        """Run many requests under one mechanism, preserving order.
+
+        The JAX engine executes homogeneous batches natively (one vmap over
+        warps and padded programs); heterogeneous batches fall back to
+        per-request runs.  numpy mechanisms run sequentially unless the
+        Simulator was built with ``max_workers`` (see class docstring).
+        """
+        mech = get_mechanism(mechanism or self._default)
+        reqs = [as_request(p, cfg, **request_kw) for p in programs]
+        if not reqs:
+            return []
+        if mech.batch_runner is not None and self._homogeneous(reqs):
+            results = mech.batch_runner(reqs)
+        elif (mech.backend == "numpy" and len(reqs) > 1
+                and self._max_workers is not None):
+            with ThreadPoolExecutor(max_workers=self._max_workers) as pool:
+                results = list(pool.map(mech, reqs))
+        else:
+            results = [mech(r) for r in reqs]
+        for req, res in zip(reqs, results):
+            self._feed_sink(sink or self._sink, mech, req, res)
+        return results
+
+    @staticmethod
+    def _homogeneous(reqs: Sequence[SimRequest]) -> bool:
+        r0 = reqs[0]
+        return all(r.resolved_cfg() == r0.resolved_cfg()
+                   and r.majority_first == r0.majority_first
+                   and r.active0 is None
+                   for r in reqs)
+
+    # -- mechanism comparison (the paper's evaluation as an API) ------------
+
+    def compare(self, mechanisms: Sequence[str],
+                programs: Iterable[ProgramLike],
+                cfg: MachineConfig | None = None, *,
+                pairs: Sequence[tuple[str, str]] | None = None,
+                timing: bool = True,
+                timing_warps: int = 4,
+                timing_cfg: TimingConfig = TimingConfig(),
+                **request_kw) -> CompareReport:
+        """Run ``programs`` under each mechanism; diff every pair.
+
+        For each program and ordered pair ``(a, b)`` the report carries the
+        paper's two metrics: control-flow trace discrepancy (normalized
+        Levenshtein, ``b`` as the reference — Fig 9) and the relative IPC
+        delta from the trace-driven GTO timing model (Fig 10, with
+        ``timing_warps`` identical warps per scheduler).  ``pairs`` defaults
+        to all ordered pairs of ``mechanisms``.
+
+        ``timing=False`` skips the (pure-Python, per-trace-slot) timing
+        model for callers that only consume discrepancy/utilization: IPC
+        fields come back NaN and utilization is taken directly from the
+        traces (the same value the timing model would report).
+        """
+        names = [get_mechanism(m).name for m in mechanisms]
+        reqs = [as_request(p, cfg, **request_kw) for p in programs]
+        # unique program ids (anonymous ndarrays would otherwise collide)
+        pids: list[str] = []
+        for i, req in enumerate(reqs):
+            pid = req.name or f"prog{i}"
+            if pid in pids:
+                pid = f"{pid}#{i}"
+            pids.append(pid)
+        results: dict[tuple[str, str], SimResult] = {}
+        for mech_name in names:
+            for pid, res in zip(pids,
+                                self.run_batch(reqs, mechanism=mech_name)):
+                results[(pid, mech_name)] = res
+
+        if pairs is None:
+            pairs = [(a, b) for a, b in itertools.permutations(names, 2)]
+        rows = []
+        timing_cache: dict[tuple[str, str], Any] = {}
+
+        def timed(pid: str, req: SimRequest, mech_name: str):
+            key = (pid, mech_name)
+            if key not in timing_cache:
+                res = results[key]
+                timing_cache[key] = simulate(
+                    [list(res.trace)] * timing_warps, req.program,
+                    req.resolved_cfg().n_threads, timing_cfg)
+            return timing_cache[key]
+
+        nan = float("nan")
+        for pid, req in zip(pids, reqs):
+            for a, b in pairs:
+                ra, rb = results[(pid, a)], results[(pid, b)]
+                if timing:
+                    ta, tb = timed(pid, req, a), timed(pid, req, b)
+                    ipc_a, ipc_b = ta.ipc, tb.ipc
+                    delta = ipc_delta(ta, tb)
+                    util_a, util_b = ta.simd_utilization, tb.simd_utilization
+                else:
+                    ipc_a = ipc_b = delta = nan
+                    util_a, util_b = ra.utilization, rb.utilization
+                rows.append(CompareRow(
+                    program=pid, mech_a=a, mech_b=b,
+                    discrepancy=discrepancy(list(ra.trace), list(rb.trace)),
+                    ipc_a=ipc_a, ipc_b=ipc_b,
+                    ipc_delta=delta,
+                    util_a=util_a, util_b=util_b,
+                    status_a=ra.status.value, status_b=rb.status.value,
+                    trace_len_a=len(ra.trace), trace_len_b=len(rb.trace)))
+        return CompareReport(mechanisms=tuple(names), rows=tuple(rows),
+                             results=results)
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _feed_sink(sink: TraceSink | None, mech: Mechanism,
+                   req: SimRequest, result: SimResult) -> None:
+        if sink is None:
+            return
+        sink.begin({"mechanism": mech.name, "program": req.name,
+                    "n_threads": req.resolved_cfg().n_threads,
+                    "program_len": int(np.asarray(req.program).shape[0])})
+        for pc, mask in result.trace:
+            sink.emit(pc, mask)
+        sink.end(result)

@@ -1,0 +1,131 @@
+"""Pluggable trace sinks: one consumer protocol for every engine's trace.
+
+Historically each engine had its own trace format (python list of pairs in
+the numpy interpreters, ring arrays in the JAX state, int64 token vectors
+for Levenshtein).  A :class:`TraceSink` receives the *normalized* stream —
+``begin(meta)`` once, ``emit(pc, mask)`` per issued scheduler slot, and
+``end(result)`` with the finished :class:`~repro.engine.types.SimResult` —
+regardless of which mechanism produced it.
+
+Built-ins:
+
+* :class:`MemorySink`     — accumulates complete runs in memory (the default
+  for tests and notebooks);
+* :class:`JsonlSink`      — streams one JSON object per event to a file, the
+  archival format for offline diffing at service scale;
+* :class:`RingBufferSink` — keeps only the last ``capacity`` slots, the
+  flight-recorder mode for long-running / high-traffic simulation where full
+  traces would be unbounded.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Any, IO, Mapping
+
+from .types import SimResult
+
+
+class TraceSink:
+    """Base class; all hooks are optional no-ops."""
+
+    def begin(self, meta: Mapping[str, Any]) -> None:
+        pass
+
+    def emit(self, pc: int, mask: int) -> None:
+        pass
+
+    def end(self, result: SimResult) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "TraceSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class MemorySink(TraceSink):
+    """Collects ``(meta, trace, result)`` triples for every run."""
+
+    def __init__(self) -> None:
+        self.runs: list[dict[str, Any]] = []
+        self._cur: dict[str, Any] | None = None
+
+    def begin(self, meta: Mapping[str, Any]) -> None:
+        self._cur = {"meta": dict(meta), "trace": [], "result": None}
+
+    def emit(self, pc: int, mask: int) -> None:
+        if self._cur is not None:
+            self._cur["trace"].append((pc, mask))
+
+    def end(self, result: SimResult) -> None:
+        if self._cur is not None:
+            self._cur["result"] = result
+            self.runs.append(self._cur)
+            self._cur = None
+
+    @property
+    def traces(self) -> list[list[tuple[int, int]]]:
+        return [r["trace"] for r in self.runs]
+
+
+class JsonlSink(TraceSink):
+    """Streams events as JSON lines to ``path`` (or an open file object)."""
+
+    def __init__(self, path_or_file: "str | IO[str]") -> None:
+        if isinstance(path_or_file, str):
+            self._fh: IO[str] = open(path_or_file, "w", encoding="utf-8")
+            self._owns = True
+        else:
+            self._fh = path_or_file
+            self._owns = False
+        self.events_written = 0
+
+    def _write(self, obj: Mapping[str, Any]) -> None:
+        self._fh.write(json.dumps(obj, separators=(",", ":")) + "\n")
+        self.events_written += 1
+
+    def begin(self, meta: Mapping[str, Any]) -> None:
+        self._write({"event": "begin", **dict(meta)})
+
+    def emit(self, pc: int, mask: int) -> None:
+        self._write({"event": "issue", "pc": int(pc), "mask": int(mask)})
+
+    def end(self, result: SimResult) -> None:
+        self._write({"event": "end", "mechanism": result.mechanism,
+                     "status": result.status.value, "steps": result.steps,
+                     "fuel_left": result.fuel_left,
+                     "finished": int(result.finished),
+                     "utilization": result.utilization,
+                     "error": result.error})
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._owns and not self._fh.closed:
+            self._fh.close()
+
+
+class RingBufferSink(TraceSink):
+    """Flight recorder: keeps the last ``capacity`` issued slots only."""
+
+    def __init__(self, capacity: int = 1024) -> None:
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self.buffer: deque[tuple[int, int]] = deque(maxlen=capacity)
+        self.total_emitted = 0
+        self.last_result: SimResult | None = None
+
+    def emit(self, pc: int, mask: int) -> None:
+        self.buffer.append((pc, mask))
+        self.total_emitted += 1
+
+    def end(self, result: SimResult) -> None:
+        self.last_result = result
+
+    def snapshot(self) -> list[tuple[int, int]]:
+        return list(self.buffer)

@@ -1,0 +1,133 @@
+"""Normalized request/result schema shared by every control-flow mechanism.
+
+Before this module existed each engine had its own calling convention and
+result shape: ``interp.run_hanoi`` / ``run_simt_stack`` returned a mutable
+``RunResult`` with a python-list trace, ``dualpath.run_dual_path`` the same
+but with different keyword knobs, and the vectorized JAX engine returned a
+raw :class:`~repro.core.hanoi.HanoiState` pytree with a ring-buffer trace.
+``SimRequest``/``SimResult`` are the one schema all of them now map onto.
+
+Out-of-fuel normalization
+-------------------------
+All engines burn one unit of fuel per scheduler slot and stop issuing the
+moment fuel reaches zero, so their traces are *truncated* identically — the
+property suite asserts the numpy and JAX engines agree step-for-step even
+when fuel dies mid-split.  What used to differ is the *flagging*: the numpy
+engines folded fuel exhaustion into a generic ``deadlocked`` bool while the
+JAX engine required inspecting ``state.fuel``.  ``SimResult.status`` makes
+the distinction explicit and uniform:
+
+* ``OK``           — every thread retired through EXIT with fuel to spare;
+* ``OUT_OF_FUEL``  — the scheduler-slot budget expired first (the trace is
+  truncated at the last fueled slot, never silently dropped);
+* ``DEADLOCK``     — no runnable path remained while threads were still
+  unfinished (fuel was left over — a *structural* hang, e.g. a BSYNC whose
+  mask can never assemble);
+* ``ERROR``        — a structural resource error (Bx exhaustion on
+  WARPSYNC).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.isa import MachineConfig
+from repro.core.trace import trace_tokens as _trace_tokens
+
+
+class SimStatus(enum.Enum):
+    """Normalized termination status (see module docstring)."""
+
+    OK = "ok"
+    OUT_OF_FUEL = "out_of_fuel"
+    DEADLOCK = "deadlock"
+    ERROR = "error"
+
+
+@dataclass(frozen=True, eq=False)
+class SimRequest:
+    """One warp execution: program + machine + initial state + run options.
+
+    ``fuel`` overrides ``cfg.max_steps`` when given (so a shared config can
+    be re-budgeted per request).  ``bsync_skip_pcs`` is consumed only by
+    the ``turing_oracle`` mechanism; the others ignore it.
+
+    ``eq=False``: ndarray fields make generated ``__eq__``/``__hash__``
+    raise, so requests/results compare and hash by identity — usable as
+    set members and dict keys.
+    """
+
+    program: np.ndarray
+    cfg: MachineConfig = MachineConfig()
+    init_regs: Any = None
+    init_mem: Any = None
+    lane_ids: Any = None
+    active0: int | None = None
+    fuel: int | None = None
+    record_trace: bool = True
+    majority_first: bool = True
+    bsync_skip_pcs: tuple[int, ...] = ()
+    name: str = ""
+
+    def resolved_cfg(self) -> MachineConfig:
+        if self.fuel is None:
+            return self.cfg
+        return self.cfg._replace(max_steps=int(self.fuel))
+
+
+@dataclass(frozen=True, eq=False)
+class SimResult:
+    """Normalized outcome of running one warp under one mechanism.
+
+    ``eq=False`` for the same reason as :class:`SimRequest`: identity
+    comparison/hashing instead of crashing on the ndarray fields.
+    """
+
+    mechanism: str
+    status: SimStatus
+    regs: np.ndarray
+    preds: np.ndarray
+    mem: np.ndarray
+    finished: int
+    steps: int
+    fuel_left: int
+    trace: tuple[tuple[int, int], ...]
+    utilization: float
+    error: str | None = None
+    wall_time_s: float = 0.0
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.status is SimStatus.OK
+
+    @property
+    def deadlocked(self) -> bool:
+        """Legacy predicate: matches ``RunResult.deadlocked`` (fuel
+        exhaustion and structural deadlock were historically one flag)."""
+        return self.status is not SimStatus.OK
+
+    def trace_tokens(self) -> np.ndarray:
+        return _trace_tokens(list(self.trace))
+
+
+def classify_status(*, finished: int, full_mask: int, fuel_left: int,
+                    error: str | None) -> SimStatus:
+    """The one status derivation every adapter funnels through.
+
+    ``fuel_left < 0`` means "unknown" (the legacy ``RunResult`` default for
+    engines that predate fuel accounting): such runs classify on the
+    finished mask alone and are never flagged OUT_OF_FUEL.
+    """
+    if error:
+        return SimStatus.ERROR
+    if fuel_left == 0:
+        # budget expired — even a fully-finished run keeps the legacy
+        # "deadlocked" view (fuel exhaustion has always been flagged)
+        return SimStatus.OUT_OF_FUEL
+    if (finished & full_mask) == full_mask:
+        return SimStatus.OK
+    return SimStatus.DEADLOCK

@@ -1,13 +1,20 @@
-"""Serving driver: batched prefill + decode with KV/recurrent caches.
+"""Serving driver: batched prefill + decode with KV/recurrent caches,
+plus the control-flow *simulation service* endpoint.
 
 Greedy-decodes a batch of prompts on a smoke config (CPU) or the production
 mesh (TPU).  Prefill is teacher-forced through ``decode_step`` position by
 position for windowed/recurrent caches' ring semantics — the compiled decode
 step is the same function the decode_32k / long_500k dry-run cells lower.
 
+``serve_simulations`` is the second endpoint: it takes a batch of warp
+simulation requests and dispatches them through the unified ``repro.engine``
+API (vmap-batched on the JAX mechanism) — the seed of the ROADMAP's
+production-scale simulation service.
+
 Usage:
   python -m repro.launch.serve --arch rwkv6-3b --batch 4 --prompt-len 16 \\
       --gen-len 32
+  python -m repro.launch.serve --mode sim --mechanism hanoi_jax --batch 64
 """
 from __future__ import annotations
 
@@ -59,13 +66,65 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
             "tokens_per_s": batch * steps / dt}
 
 
+def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
+                      sink=None, max_workers: int | None = None) -> dict:
+    """Serve a batch of control-flow simulation requests.
+
+    ``requests`` is a sequence of ``repro.engine.SimRequest`` (or Benchmark /
+    ndarray program) objects.  Returns the normalized results plus service
+    metrics; attach a TraceSink (e.g. ``JsonlSink``) for archival traces.
+    """
+    from repro.engine import Simulator
+
+    sim = Simulator(mechanism, sink=sink, max_workers=max_workers)
+    t0 = time.time()
+    results = sim.run_batch(requests)
+    dt = time.time() - t0
+    n_ok = sum(1 for r in results if r.ok)
+    return {"results": results, "wall_s": dt,
+            "warps_per_s": len(results) / max(dt, 1e-9),
+            "ok": n_ok, "failed": len(results) - n_ok,
+            "mechanism": mechanism}
+
+
+def _sim_main(args) -> None:
+    from repro.core import MachineConfig
+    from repro.core.programs import make_suite
+    from repro.engine import SimRequest
+
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+    suite = make_suite(cfg, datasets=1)
+    bench = next((b for b in suite if b.name == args.bench), None)
+    if bench is None:
+        raise SystemExit(f"unknown benchmark {args.bench!r}; available: "
+                         + ", ".join(b.name for b in suite))
+    rng = np.random.default_rng(0)
+    reqs = [SimRequest(program=bench.program, cfg=cfg,
+                       init_mem=rng.integers(0, 8, size=cfg.mem_size)
+                       .astype(np.int32),
+                       record_trace=False, name=f"req{i}")
+            for i in range(args.batch)]
+    res = serve_simulations(reqs, mechanism=args.mechanism)
+    print(f"[serve:sim] {args.batch} x {args.bench} via {args.mechanism}: "
+          f"{res['ok']} ok / {res['failed']} failed in {res['wall_s']:.3f}s "
+          f"({res['warps_per_s']:.0f} warps/s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "sim"], default="lm")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--mechanism", default="hanoi_jax",
+                    help="[sim] control-flow mechanism to serve with")
+    ap.add_argument("--bench", default="GAUS0",
+                    help="[sim] benchmark program to serve")
     args = ap.parse_args()
+    if args.mode == "sim":
+        _sim_main(args)
+        return
     res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen_len)
     print(f"[serve] generated {res['generated'].shape} tokens in "

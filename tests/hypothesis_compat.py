@@ -1,0 +1,44 @@
+"""Degrade gracefully where hypothesis is absent.
+
+``from tests.hypothesis_compat import given, settings, st`` works with or
+without hypothesis installed: with it, these are the real objects; without
+it, ``@given`` turns the test into an individually-skipped placeholder so
+the *other* (example-based) tests in the same module still collect and run.
+Modules that are 100% property-based can use ``pytest.importorskip``
+instead; mixed modules should use this shim.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _REASON = ("hypothesis not installed "
+               "(pip install -r requirements-dev.txt)")
+
+    class _AnyStrategy:
+        """Stand-in for hypothesis.strategies: any attribute is callable."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg placeholder: keeps pytest from trying to resolve the
+            # strategy parameters as fixtures before honoring the skip
+            @pytest.mark.skip(reason=_REASON)
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

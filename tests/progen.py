@@ -1,0 +1,92 @@
+"""Random structured-program generator shared by the property suites.
+
+Lives outside the test modules (and imports no hypothesis) so that
+benchmark/property consumers can build the same If/While/BREAK program
+distribution regardless of whether hypothesis is installed.
+"""
+import numpy as np
+
+from repro.core import MachineConfig, compile_structured
+from repro.core.structured import If, Raw, Seq, While
+
+W = 8
+MEM = 64
+BASE_CFG = MachineConfig(n_threads=W, n_regs=16, n_preds=4, n_bx=8,
+                         mem_size=MEM, max_steps=20_000)
+
+# lane-private address offsets: lower half of memory is read-only input,
+# upper half is written at lane-private cells
+_RD_OFFS = [0, W, 2 * W, 3 * W]
+_WR_OFFS = [4 * W, 5 * W, 6 * W, 7 * W]
+
+
+def _raw(rng) -> Raw:
+    ops = []
+    for _ in range(rng.integers(1, 4)):
+        k = rng.integers(0, 6)
+        if k == 0:
+            ops.append(f"IADDI R2, R2, {int(rng.integers(-3, 4))}")
+        elif k == 1:
+            ops.append("IADD R5, R2, R1")
+        elif k == 2:
+            ops.append("XOR R6, R5, R2")
+        elif k == 3:
+            ops.append(f"LDG R5, [R1+{int(rng.choice(_RD_OFFS))}]")
+        elif k == 4:
+            ops.append(f"STG [R1+{int(rng.choice(_WR_OFFS))}], R5")
+        else:
+            ops.append("IADD R2, R2, R5")
+    return Raw(ops)
+
+
+def _cond(rng, pred: int) -> list[str]:
+    reg = rng.choice(["R2", "R5", "R6", "R1"])
+    cmp = rng.choice(["LT", "GT", "EQ", "NE", "GE", "LE"])
+    return [f"ISETP.{cmp} P{pred}, {reg}, {int(rng.integers(-2, 5))}"]
+
+
+def _node(rng, depth: int, loop_level: int) -> "Seq | If | While | Raw":
+    choices = ["raw", "seq"]
+    if depth < 3:
+        choices += ["if", "if", "while"]
+    kind = rng.choice(choices)
+    if kind == "raw":
+        return _raw(rng)
+    if kind == "seq":
+        return Seq([_node(rng, depth, loop_level)
+                    for _ in range(rng.integers(1, 3))])
+    pred = int(rng.integers(0, 2))
+    if kind == "if":
+        has_else = bool(rng.integers(0, 2))
+        return If(cond=_cond(rng, pred), pred=pred,
+                  then_=_node(rng, depth + 1, loop_level),
+                  else_=_node(rng, depth + 1, loop_level) if has_else else None)
+    # while: bounded counter in R{8+loop_level}
+    rc = 8 + loop_level
+    bound = int(rng.integers(1, 4))
+    body = Seq([Raw([f"IADDI R{rc}, R{rc}, 1"]),
+                _node(rng, depth + 1, loop_level + 1)])
+    brk = None
+    if rng.integers(0, 3) == 0:
+        body = Seq([Raw(["ISETP.GT P2, R5, 6"]), body])
+        brk = 2
+    return Seq([Raw([f"MOV R{rc}, 0"]),
+                While(cond=[f"ISETP.LT P{pred}, R{rc}, {bound}"], pred=pred,
+                      body=body, break_pred=brk)])
+
+
+def make_program(seed: int, n_bx: int):
+    rng = np.random.default_rng(seed)
+    ast = Seq([Raw(["LANEID R1", "MOVR R2, R1"]),
+               _node(rng, 0, 0),
+               _node(rng, 0, 0)])
+    cfg = BASE_CFG._replace(n_bx=n_bx)
+    try:
+        prog = compile_structured(ast, cfg)
+    except ValueError:   # BREAK under spill pressure: legitimately rejected
+        return None, cfg
+    mem = rng.integers(0, 8, size=MEM).astype(np.int32)
+    return (prog, mem), cfg
+
+
+CHECK_REGS = [1, 2, 5, 6, 8, 9, 10]

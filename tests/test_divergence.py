@@ -2,7 +2,10 @@
 the Pallas kernel's schedule-time predicates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# compat shim: without hypothesis only the @given tests skip, the
+# example-based census tests still run
+from tests.hypothesis_compat import given, settings, st
 
 from repro.core.divergence import (EMPTY, FULL, PARTIAL, MaskSpec, census,
                                    classify_grid, schedule_order)

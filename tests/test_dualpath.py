@@ -17,13 +17,13 @@ sharper picture than the test author first assumed (see EXPERIMENTS.md):
 import numpy as np
 import pytest
 
-from repro.core import (MachineConfig, run_hanoi, run_reference,
-                        run_simt_stack, simd_utilization)
+from repro.core import MachineConfig, run_reference, simd_utilization
+from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.dualpath import run_dual_path
 from repro.core.programs import (fig6_no_break_program, fig6_program,
                                  make_suite, spinlock_program,
                                  warpsync_program)
-from tests.test_property_core import make_program
+from tests.progen import make_program
 
 CFG = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
 

@@ -1,0 +1,341 @@
+"""Unified engine API: registry, batching, comparison, sinks, shims.
+
+This is the contract of ``repro.engine`` — the canonical simulation entry
+point: mechanism registry round-trips, ``run_batch`` == N x ``run``,
+``compare()`` self-discrepancy is exactly 0.0, normalized out-of-fuel /
+deadlock statuses agree across engines, trace sinks see the normalized
+stream, and the ``repro.core`` deprecation shims still return the original
+callables.
+"""
+import io
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import MachineConfig
+from repro.core.programs import (fig6_program, make_suite, spinlock_program)
+from repro.engine import (JsonlSink, MemorySink, RingBufferSink, SimRequest,
+                          SimStatus, Simulator, as_request,
+                          available_mechanisms, classify_status,
+                          get_mechanism, register_mechanism,
+                          unregister_mechanism)
+
+CFG = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+SUITE = make_suite(CFG, datasets=1)
+SIM = Simulator("hanoi")
+
+
+def _bench(name):
+    return next(b for b in SUITE if b.name == name)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_mechanisms_registered():
+    names = available_mechanisms()
+    for expected in ("simt_stack", "hanoi", "hanoi_jax", "dualpath",
+                     "turing_oracle"):
+        assert expected in names
+
+
+def test_registry_round_trip():
+    @register_mechanism("echo_test", backend="numpy",
+                        description="registry round-trip probe")
+    def _echo(req):
+        return SIM.run(req, mechanism="hanoi")
+
+    try:
+        mech = get_mechanism("echo_test")
+        assert mech.name == "echo_test"
+        assert mech.description == "registry round-trip probe"
+        assert "echo_test" in available_mechanisms()
+        # registered mechanisms are first-class: usable through the façade
+        r = Simulator("echo_test").run(_bench("DIAMOND"), CFG)
+        assert r.status is SimStatus.OK
+    finally:
+        unregister_mechanism("echo_test")
+    assert "echo_test" not in available_mechanisms()
+    with pytest.raises(KeyError):
+        get_mechanism("echo_test")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_mechanism("hanoi")(lambda req: None)
+
+
+def test_unknown_mechanism_error_names_known_ones():
+    with pytest.raises(KeyError, match="hanoi"):
+        Simulator("no_such_mechanism")
+
+
+# ---------------------------------------------------------------------------
+# run / run_batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mech", ["hanoi", "simt_stack", "dualpath",
+                                  "turing_oracle"])
+def test_run_batch_equals_n_runs(mech):
+    benches = [b for b in SUITE if b.name in ("HOTS0", "GAUS0", "RBFS0",
+                                              "DIAMOND")]
+    batch = SIM.run_batch(benches, CFG, mechanism=mech)
+    singles = [SIM.run(b, CFG, mechanism=mech) for b in benches]
+    assert len(batch) == len(singles)
+    for a, b in zip(batch, singles):
+        assert a.status == b.status
+        assert a.trace == b.trace
+        assert a.steps == b.steps
+        np.testing.assert_array_equal(a.regs, b.regs)
+        np.testing.assert_array_equal(a.mem, b.mem)
+
+
+def test_jax_batch_matches_numpy_reference():
+    """The vmap-batched JAX mechanism is bit-identical, per warp, to the
+    numpy mechanism — through the public API only."""
+    benches = [b for b in SUITE if b.name in ("HOTS0", "GAUS0", "FIG5",
+                                              "DIAMOND")]
+    jax_batch = SIM.run_batch(benches, CFG, mechanism="hanoi_jax")
+    np_batch = SIM.run_batch(benches, CFG, mechanism="hanoi")
+    for a, b in zip(jax_batch, np_batch):
+        assert a.mechanism == "hanoi_jax" and b.mechanism == "hanoi"
+        assert a.status == b.status
+        assert a.trace == b.trace
+        np.testing.assert_array_equal(a.regs, b.regs)
+        np.testing.assert_array_equal(a.mem, b.mem)
+        assert a.finished == b.finished
+
+
+def test_empty_batch():
+    assert SIM.run_batch([], CFG) == []
+
+
+# ---------------------------------------------------------------------------
+# normalized status
+# ---------------------------------------------------------------------------
+
+def test_status_ok():
+    r = SIM.run(_bench("DIAMOND"), CFG)
+    assert r.status is SimStatus.OK and r.ok and not r.deadlocked
+    assert r.fuel_left > 0
+
+
+def test_status_out_of_fuel_spinlock_prevolta():
+    """The pre-Volta spinlock hang manifests as fuel exhaustion — flagged
+    OUT_OF_FUEL, with the trace truncated at the last fueled slot."""
+    cfg = MachineConfig(n_threads=4, max_steps=512)
+    r = SIM.run(spinlock_program(), cfg, mechanism="simt_stack")
+    assert r.status is SimStatus.OUT_OF_FUEL
+    assert r.fuel_left == 0
+    assert r.deadlocked                       # legacy view preserved
+    assert len(r.trace) <= cfg.max_steps
+
+
+def test_status_deadlock_structural():
+    """Fig 6 without BREAK: BSYNC waits on a mask that can never assemble.
+    Hanoi burns fuel spinning (OUT_OF_FUEL); what matters is that the
+    status is not OK and fuel semantics are explicit."""
+    from repro.core.programs import fig6_no_break_program
+    cfg = MachineConfig(n_threads=4, max_steps=256)
+    r = SIM.run(fig6_no_break_program(), cfg)
+    assert r.status in (SimStatus.OUT_OF_FUEL, SimStatus.DEADLOCK)
+    assert not r.ok
+
+
+def test_fuel_override_on_request():
+    r = SIM.run(_bench("DIAMOND"), CFG, fuel=3)
+    assert r.status is SimStatus.OUT_OF_FUEL
+    assert len(r.trace) == 3
+
+
+def test_overrides_apply_to_existing_simrequest():
+    """Passing a SimRequest plus cfg/kwargs must re-budget it, not silently
+    ignore the overrides."""
+    b = _bench("DIAMOND")
+    req = SimRequest(program=b.program, cfg=CFG, init_mem=b.init_mem)
+    r = SIM.run(req, fuel=3)
+    assert r.status is SimStatus.OUT_OF_FUEL and len(r.trace) == 3
+    small = CFG._replace(max_steps=4)
+    r2 = SIM.run(req, small)
+    assert r2.status is SimStatus.OUT_OF_FUEL and len(r2.trace) == 4
+    assert as_request(req) is req          # no overrides -> pass-through
+
+
+def test_classify_status_matrix():
+    full = 0b1111
+    assert classify_status(finished=full, full_mask=full, fuel_left=5,
+                           error=None) is SimStatus.OK
+    assert classify_status(finished=full, full_mask=full, fuel_left=0,
+                           error=None) is SimStatus.OUT_OF_FUEL
+    assert classify_status(finished=0b0011, full_mask=full, fuel_left=0,
+                           error=None) is SimStatus.OUT_OF_FUEL
+    assert classify_status(finished=0b0011, full_mask=full, fuel_left=9,
+                           error=None) is SimStatus.DEADLOCK
+    assert classify_status(finished=full, full_mask=full, fuel_left=5,
+                           error="boom") is SimStatus.ERROR
+    # fuel_left < 0 = "unknown" (legacy RunResult default): classify on the
+    # finished mask alone, never OUT_OF_FUEL
+    assert classify_status(finished=full, full_mask=full, fuel_left=-1,
+                           error=None) is SimStatus.OK
+    assert classify_status(finished=0b0011, full_mask=full, fuel_left=-1,
+                           error=None) is SimStatus.DEADLOCK
+
+
+def test_fuel_exhaustion_trace_equivalence_numpy_vs_jax():
+    """Non-hypothesis regression for the out-of-fuel normalization: fuel
+    dies mid-split on a divergent benchmark and both engines must agree on
+    the truncated trace and the flag."""
+    bench = _bench("RBFS0")
+    for fuel in (5, 17, 41):
+        a = SIM.run(bench, CFG, fuel=fuel, mechanism="hanoi")
+        b = SIM.run(bench, CFG, fuel=fuel, mechanism="hanoi_jax")
+        assert a.status is SimStatus.OUT_OF_FUEL
+        assert b.status is SimStatus.OUT_OF_FUEL
+        assert a.trace == b.trace
+        assert a.steps == b.steps
+        assert a.fuel_left == b.fuel_left == 0
+
+
+# ---------------------------------------------------------------------------
+# compare
+# ---------------------------------------------------------------------------
+
+def test_compare_self_discrepancy_zero():
+    benches = [b for b in SUITE if b.name in ("HOTS0", "RBFS0", "DIAMOND")]
+    report = SIM.compare(["hanoi", "hanoi_jax"], benches, CFG)
+    for row in report.rows:
+        assert row.discrepancy == 0.0
+        assert row.ipc_delta == 0.0
+        assert row.util_a == row.util_b
+
+
+def test_compare_oracle_skip_diverges_on_bfsd():
+    report = SIM.compare(["hanoi", "turing_oracle"], SUITE, CFG,
+                         pairs=[("hanoi", "turing_oracle")])
+    rows = {r.program: r for r in report.rows}
+    assert rows["BFSD"].discrepancy > 0            # the skipped BSYNC shows
+    assert rows["DIAMOND"].discrepancy == 0.0      # no skip pcs -> identical
+
+
+def test_compare_without_timing_model():
+    bench = _bench("BFSD")
+    rep = SIM.compare(["hanoi", "turing_oracle"], [bench], CFG,
+                      pairs=[("hanoi", "turing_oracle")], timing=False)
+    row = rep.rows[0]
+    assert math.isnan(row.ipc_a) and math.isnan(row.ipc_delta)
+    assert row.discrepancy > 0
+    # utilization falls back to the trace-derived value
+    a = SIM.run(bench, CFG)
+    b = SIM.run(bench, CFG, mechanism="turing_oracle")
+    assert row.util_a == a.utilization and row.util_b == b.utilization
+
+
+def test_compare_anonymous_programs_get_unique_ids():
+    prog = _bench("DIAMOND").program
+    report = SIM.compare(["hanoi", "simt_stack"], [prog, prog], CFG)
+    assert {r.program for r in report.rows} == {"prog0", "prog1"}
+
+
+# ---------------------------------------------------------------------------
+# trace sinks
+# ---------------------------------------------------------------------------
+
+def test_memory_sink_sees_normalized_stream():
+    sink = MemorySink()
+    r = SIM.run(_bench("DIAMOND"), CFG, sink=sink)
+    assert len(sink.runs) == 1
+    run = sink.runs[0]
+    assert run["meta"]["mechanism"] == "hanoi"
+    assert run["meta"]["program"] == "DIAMOND"
+    assert run["trace"] == list(r.trace)
+    assert run["result"] is r
+
+
+def test_jsonl_sink_round_trip():
+    buf = io.StringIO()
+    r = SIM.run(_bench("DIAMOND"), CFG, sink=JsonlSink(buf))
+    events = [json.loads(line) for line in buf.getvalue().splitlines()]
+    assert events[0]["event"] == "begin"
+    assert events[-1]["event"] == "end"
+    issues = [e for e in events if e["event"] == "issue"]
+    assert [(e["pc"], e["mask"]) for e in issues] == list(r.trace)
+    assert events[-1]["status"] == "ok"
+
+
+def test_ring_buffer_sink_keeps_tail():
+    sink = RingBufferSink(capacity=8)
+    r = SIM.run(_bench("HOTS0"), CFG, sink=sink)
+    assert sink.total_emitted == len(r.trace) > 8
+    assert sink.snapshot() == list(r.trace)[-8:]
+    assert sink.last_result is r
+
+
+def test_sink_attached_at_construction_sees_batches():
+    sink = MemorySink()
+    sim = Simulator("hanoi", sink=sink)
+    benches = [b for b in SUITE if b.name in ("HOTS0", "DIAMOND")]
+    sim.run_batch(benches, CFG)
+    assert [run["meta"]["program"] for run in sink.runs] == \
+        ["HOTS0", "DIAMOND"]
+
+
+# ---------------------------------------------------------------------------
+# request coercion + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_as_request_coercions():
+    b = _bench("BFSD")
+    req = as_request(b, CFG)
+    assert req.name == "BFSD"
+    assert req.bsync_skip_pcs == tuple(b.skip_bsync_pcs)
+    raw = as_request(b.program, CFG)
+    assert raw.name == "" and raw.bsync_skip_pcs == ()
+    assert as_request(req) is req
+    # overrides that collide with Benchmark-derived fields must win, not
+    # raise "multiple values for keyword argument"
+    other_mem = np.ones(CFG.mem_size, np.int32)
+    over = as_request(b, CFG, init_mem=other_mem, name="custom")
+    assert over.name == "custom"
+    np.testing.assert_array_equal(over.init_mem, other_mem)
+    r = SIM.run(b, CFG, init_mem=other_mem)
+    assert r.status is SimStatus.OK
+
+
+def test_report_pair_unknown_raises():
+    report = SIM.compare(["hanoi", "turing_oracle"], [_bench("DIAMOND")],
+                         CFG, pairs=[("hanoi", "turing_oracle")])
+    with pytest.raises(KeyError, match="computed pairs"):
+        report.pair("turing_oracle", "hanoi")      # swapped order
+    with pytest.raises(KeyError):
+        report.mean_discrepancy("hanoi", "nope")
+
+
+def test_core_shims_warn_and_return_identical_callables():
+    import repro.core
+    import repro.core.interp
+    import repro.core.dualpath
+    for name, target in [
+            ("run_hanoi", repro.core.interp.run_hanoi),
+            ("run_simt_stack", repro.core.interp.run_simt_stack),
+            ("run_dual_path", repro.core.dualpath.run_dual_path)]:
+        with pytest.warns(DeprecationWarning, match="repro.engine"):
+            fn = getattr(repro.core, name)
+        assert fn is target
+
+
+def test_shimmed_entry_point_returns_identical_results():
+    import repro.core
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = repro.core.run_hanoi
+    b = _bench("DIAMOND")
+    old = legacy(b.program, CFG, init_mem=b.init_mem)
+    new = SIM.run(b, CFG)
+    assert old.trace == list(new.trace)
+    np.testing.assert_array_equal(old.regs, new.regs)
+    assert old.finished == new.finished
+    assert old.fuel_left == new.fuel_left

@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import (MachineConfig, Op, assemble, immediate_postdominators,
-                        run_hanoi, run_reference, run_simt_stack)
+                        run_reference)
+from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.programs import (diamond_program, fig5_program,
                                  fig6_no_break_program, fig6_program,
                                  warpsync_program)

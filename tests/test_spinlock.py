@@ -4,7 +4,8 @@ section does a non-atomic read-modify-write on a shared counter."""
 import numpy as np
 import pytest
 
-from repro.core import MachineConfig, run_hanoi, run_simt_stack
+from repro.core import MachineConfig
+from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.programs import spinlock_no_yield_program, spinlock_program
 
 

@@ -1,21 +1,27 @@
 """Behavioral validation of the benchmark suite (Table II analogue) on all
-three machines, plus the timing model's basic sanity."""
+three machines, plus the timing model's basic sanity.
+
+All engine invocations go through the unified ``repro.engine`` API (the
+canonical entry point); ``run_reference`` stays a direct import because the
+per-thread scalar oracle is a correctness yardstick, not a mechanism.
+"""
 import numpy as np
 import pytest
 
-from repro.core import (MachineConfig, run_hanoi, run_reference,
-                        run_simt_stack, simd_utilization)
+from repro.core import MachineConfig, run_reference
 from repro.core.programs import make_suite
 from repro.core.timing import TimingConfig, simulate
+from repro.engine import SimStatus, Simulator
 
 CFG = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
 SUITE = make_suite(CFG, datasets=1)
+SIM = Simulator("hanoi")
 
 
 @pytest.mark.parametrize("bench", SUITE, ids=lambda b: b.name)
 def test_hanoi_completes(bench):
-    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    assert not r.deadlocked, f"{bench.name} deadlocked on Hanoi"
+    r = SIM.run(bench, CFG)
+    assert r.status is SimStatus.OK, f"{bench.name}: {r.status}"
     assert r.error is None
     assert r.finished == CFG.full_mask
 
@@ -23,7 +29,7 @@ def test_hanoi_completes(bench):
 @pytest.mark.parametrize("bench", [b for b in SUITE if b.race_free],
                          ids=lambda b: b.name)
 def test_suite_matches_reference(bench):
-    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
+    r = SIM.run(bench, CFG)
     ref = run_reference(bench.program, CFG, init_mem=bench.init_mem)
     np.testing.assert_array_equal(r.mem, ref.mem)
     assert r.finished == ref.finished
@@ -34,16 +40,16 @@ def test_suite_matches_reference(bench):
 def test_suite_simt_stack_matches_reference(bench):
     """Race-free structured programs also complete pre-Volta (no SIMT-induced
     deadlock without locks)."""
-    r = run_simt_stack(bench.program, CFG, init_mem=bench.init_mem)
-    assert not r.deadlocked
+    r = SIM.run(bench, CFG, mechanism="simt_stack")
+    assert r.status is SimStatus.OK
     ref = run_reference(bench.program, CFG, init_mem=bench.init_mem)
     np.testing.assert_array_equal(r.mem, ref.mem)
 
 
 def test_histogram_counts():
     bench = next(b for b in SUITE if b.name.startswith("HIST"))
-    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    assert not r.deadlocked
+    r = SIM.run(bench, CFG)
+    assert r.status is SimStatus.OK
     vals = bench.init_mem[:32]
     expect = np.zeros(CFG.mem_size, np.int64)
     for v in vals:
@@ -57,37 +63,34 @@ def test_oracle_skip_changes_trace_not_results():
     """The BFSD benchmark: the Turing-oracle skips the loop BSYNC, producing
     a different trace (lower SIMD utilization) but identical results."""
     bench = next(b for b in SUITE if b.name == "BFSD")
-    hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    oracle = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
-                       bsync_skip_pcs=bench.skip_bsync_pcs)
-    assert not hanoi.deadlocked and not oracle.deadlocked
+    hanoi = SIM.run(bench, CFG)
+    oracle = SIM.run(bench, CFG, mechanism="turing_oracle")
+    assert hanoi.status is SimStatus.OK and oracle.status is SimStatus.OK
     np.testing.assert_array_equal(hanoi.mem, oracle.mem)
     assert hanoi.trace != oracle.trace, "heuristic must alter the schedule"
-    util_h = simd_utilization(hanoi.trace, CFG.n_threads)
-    util_o = simd_utilization(oracle.trace, CFG.n_threads)
-    assert util_h >= util_o, ("enforcing reconvergence must not lower "
-                              "SIMD utilization (paper SS IX: +31.9%)")
+    assert hanoi.utilization >= oracle.utilization, (
+        "enforcing reconvergence must not lower SIMD utilization "
+        "(paper SS IX: +31.9%)")
 
 
 def test_timing_model_prefers_reconvergence():
     """Fig 10 BFSD effect: Hanoi's reconvergence-enforcing trace yields
     higher thread-IPC than the skipping oracle trace."""
     bench = next(b for b in SUITE if b.name == "BFSD")
-    hanoi = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    oracle = run_hanoi(bench.program, CFG, init_mem=bench.init_mem,
-                       bsync_skip_pcs=bench.skip_bsync_pcs)
-    t_h = simulate([hanoi.trace], bench.program, CFG.n_threads)
-    t_o = simulate([oracle.trace], bench.program, CFG.n_threads)
-    assert t_h.simd_utilization >= t_o.simd_utilization
-    assert t_h.ipc >= t_o.ipc
+    report = SIM.compare(["hanoi", "turing_oracle"], [bench], CFG,
+                         pairs=[("hanoi", "turing_oracle")], timing_warps=1)
+    row = report.pair("hanoi", "turing_oracle")[0]
+    assert row.util_a >= row.util_b
+    assert row.ipc_a >= row.ipc_b
+    assert row.ipc_delta >= 0.0
 
 
 def test_timing_model_monotone_in_latency():
     bench = SUITE[0]
-    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    fast = simulate([r.trace], bench.program, CFG.n_threads,
+    r = SIM.run(bench, CFG)
+    fast = simulate([list(r.trace)], bench.program, CFG.n_threads,
                     TimingConfig(memory_latency=2))
-    slow = simulate([r.trace], bench.program, CFG.n_threads,
+    slow = simulate([list(r.trace)], bench.program, CFG.n_threads,
                     TimingConfig(memory_latency=200))
     assert slow.cycles > fast.cycles
     assert slow.ipc < fast.ipc
@@ -97,8 +100,8 @@ def test_timing_multi_warp_hides_latency():
     """More warps per scheduler hide memory latency: cycles grow sublinearly
     with warp count."""
     bench = next(b for b in SUITE if b.name.startswith("RBFS"))
-    r = run_hanoi(bench.program, CFG, init_mem=bench.init_mem)
-    one = simulate([r.trace], bench.program, CFG.n_threads)
-    four = simulate([r.trace] * 4, bench.program, CFG.n_threads)
+    r = SIM.run(bench, CFG)
+    one = simulate([list(r.trace)], bench.program, CFG.n_threads)
+    four = simulate([list(r.trace)] * 4, bench.program, CFG.n_threads)
     assert four.cycles < 4 * one.cycles
     assert four.ipc > one.ipc
