@@ -7,12 +7,16 @@ any mechanism by name:
    while Hanoi completes it via YIELD + late BSYNC;
 2. reproduce the Fig 6 early-reconvergence-with-BREAK walkthrough;
 3. compare Hanoi's control-flow trace against the Turing-oracle heuristic
-   (the paper's Fig 9 discrepancy metric) on a BFS-like benchmark.
+   (the paper's Fig 9 discrepancy metric) on a BFS-like benchmark;
+4. show the Volta-style per-thread-PC scheduler's forward-progress
+   guarantee (the YIELD-less spinlock terminates where Hanoi hangs) and a
+   per-SM multi-warp interleaving run.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import MachineConfig, disassemble
-from repro.core.programs import fig6_program, make_suite, spinlock_program
+from repro.core.programs import (fig6_program, make_suite,
+                                 spinlock_no_yield_program, spinlock_program)
 from repro.engine import Simulator, SimStatus
 
 W = 8
@@ -47,4 +51,24 @@ row = report.pair("hanoi", "turing_oracle")[0]
 print("\n=== Fig 9/10: BFSD — Hanoi enforces reconvergence, hardware skips ===")
 print(f"trace discrepancy: {row.discrepancy_pct:.1f}%")
 print(f"SIMD utilization:  hanoi={row.util_a:.3f} hw={row.util_b:.3f}")
+
+# --- 4. post-Volta per-thread PCs + per-SM multi-warp interleaving ----------
+noyield = spinlock_no_yield_program()
+hang = sim.run(noyield, CFG)                       # Hanoi: SS V-G ablation
+its = sim.run(noyield, CFG, mechanism="volta_itps")
+print("\n=== YIELD-less spinlock: stack mechanisms hang, per-thread PCs "
+      "don't ===")
+print(f"Hanoi:      status={hang.status.value} (needs YIELD to make "
+      f"progress)")
+print(f"volta_itps: status={its.status.value} counter={int(its.mem[1])}/{W} "
+      f"(scheduler's forward-progress guarantee)")
+assert not hang.ok and its.ok and int(its.mem[1]) == W
+
+bench = next(b for b in make_suite(CFG) if b.name == "RBFS0")
+sm = sim.run_sm(bench, CFG, n_warps=4, inner="hanoi",
+                policy="greedy_then_oldest")
+print(f"\n=== per-SM: 4 warps of RBFS0 under GTO ===")
+print(f"status={sm.status.value} slots={sm.steps} cycles={sm.cycles} "
+      f"thread-IPC={sm.ipc:.2f} util={sm.utilization:.3f}")
+assert sm.ok
 print("\nquickstart OK")

@@ -26,8 +26,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .interp import RunResult, _ArchState, first_lane, popcount
+from .interp import RunResult
 from .isa import MachineConfig, Op
+from .stepper import ArchState as _ArchState, first_lane, popcount
 
 _NOPS = {Op.BSSY, Op.BSYNC, Op.BMOV_B2R, Op.BMOV_R2B, Op.BREAK,
          Op.WARPSYNC, Op.YIELD}

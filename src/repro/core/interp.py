@@ -22,40 +22,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .isa import (ATOMIC_OPS, CMP_EQ, CMP_GE, CMP_GT, CMP_LE, CMP_LT, CMP_NE,
-                  MachineConfig, Op)
-
-
-# --------------------------------------------------------------------------
-# small mask helpers (masks are python ints, thread t <-> bit (1 << t))
-# --------------------------------------------------------------------------
-
-def popcount(m: int) -> int:
-    return int(m).bit_count()
-
-
-def first_lane(m: int) -> int:
-    """Index of the lowest set bit (first active lane)."""
-    assert m, "first_lane of empty mask"
-    return (m & -m).bit_length() - 1
-
-
-def lanes(m: int):
-    """Iterate active lane indices, lowest first (atomics serialize this way)."""
-    t = 0
-    while m:
-        if m & 1:
-            yield t
-        m >>= 1
-        t += 1
-
-
-def mask_vec(m: int, w: int) -> np.ndarray:
-    return np.array([(m >> t) & 1 for t in range(w)], dtype=bool)
-
-
-def vec_mask(v: np.ndarray) -> int:
-    return int(sum(1 << t for t, b in enumerate(v) if b))
+from .isa import MachineConfig, Op
+# The instruction-execution path (mask helpers, predicate resolution,
+# architectural state + ALU) lives in repro.core.stepper and is shared by
+# every numpy mechanism; the names are re-exported here because this module
+# defined them historically.
+from .stepper import (ArchState as _ArchState, _cmp, _pred_vec,  # noqa: F401
+                      first_lane, lanes, mask_vec, popcount, vec_mask)
 
 
 # --------------------------------------------------------------------------
@@ -104,109 +77,7 @@ def simd_utilization(trace: list[tuple[int, int]], w: int) -> float:
     return sum(popcount(m) for _, m in trace) / (len(trace) * w)
 
 
-# --------------------------------------------------------------------------
-# shared scalar/vector ALU
-# --------------------------------------------------------------------------
-
 _I32 = np.int32
-
-
-def _pred_vec(preds: np.ndarray, p: int, w: int) -> np.ndarray:
-    if p == 0:
-        return np.ones(w, dtype=bool)
-    if p > 0:
-        return preds[:, p - 1]
-    return ~preds[:, -p - 1]
-
-
-def _cmp(a: np.ndarray, b: np.ndarray, code: int) -> np.ndarray:
-    if code == CMP_EQ:
-        return a == b
-    if code == CMP_NE:
-        return a != b
-    if code == CMP_LT:
-        return a < b
-    if code == CMP_LE:
-        return a <= b
-    if code == CMP_GT:
-        return a > b
-    if code == CMP_GE:
-        return a >= b
-    raise ValueError(f"bad cmp code {code}")
-
-
-class _ArchState:
-    """Architectural state shared by all machines."""
-
-    def __init__(self, cfg: MachineConfig, init_regs, init_mem, lane_ids):
-        self.cfg = cfg
-        w = cfg.n_threads
-        self.regs = (np.zeros((w, cfg.n_regs), _I32) if init_regs is None
-                     else np.array(init_regs, _I32).reshape(w, cfg.n_regs))
-        self.preds = np.zeros((w, cfg.n_preds), dtype=bool)
-        self.mem = (np.zeros(cfg.mem_size, _I32) if init_mem is None
-                    else np.array(init_mem, _I32).reshape(cfg.mem_size))
-        self.lane_ids = (np.arange(w, dtype=_I32) if lane_ids is None
-                         else np.array(lane_ids, _I32).reshape(w))
-
-    def exec_mask(self, amask: int, p1: int, p2: int) -> int:
-        g = (_pred_vec(self.preds, p1, self.cfg.n_threads)
-             & _pred_vec(self.preds, p2, self.cfg.n_threads))
-        return amask & vec_mask(g)
-
-    def alu(self, op: int, f, exec_m: int) -> None:
-        """Execute a non-control op for lanes in ``exec_m``.  ``f`` = fields."""
-        cfg = self.cfg
-        ev = mask_vec(exec_m, cfg.n_threads)
-        R, M = self.regs, self.mem
-        dst, s0, s1, s2, imm = f[1], f[2], f[3], f[4], f[5]
-        if op == Op.NOP:
-            return
-        if op == Op.MOV:
-            R[ev, dst] = _I32(imm)
-        elif op == Op.MOVR:
-            R[ev, dst] = R[ev, s0]
-        elif op == Op.IADD:
-            R[ev, dst] = R[ev, s0] + R[ev, s1]
-        elif op == Op.IADDI:
-            R[ev, dst] = R[ev, s0] + _I32(imm)
-        elif op == Op.IMUL:
-            R[ev, dst] = R[ev, s0] * R[ev, s1]
-        elif op == Op.AND:
-            R[ev, dst] = R[ev, s0] & R[ev, s1]
-        elif op == Op.OR:
-            R[ev, dst] = R[ev, s0] | R[ev, s1]
-        elif op == Op.XOR:
-            R[ev, dst] = R[ev, s0] ^ R[ev, s1]
-        elif op == Op.SHL:
-            R[ev, dst] = R[ev, s0] << (imm & 31)
-        elif op == Op.SHR:
-            R[ev, dst] = (R[ev, s0].astype(np.uint32) >> (imm & 31)).astype(_I32)
-        elif op == Op.ISETP:
-            b = _I32(imm) if s1 == -1 else R[ev, s1]
-            self.preds[ev, dst] = _cmp(R[ev, s0], b, s2)
-        elif op == Op.LANEID:
-            R[ev, dst] = self.lane_ids[ev]
-        elif op == Op.LDG:
-            addr = (R[ev, s0] + imm) % cfg.mem_size
-            R[ev, dst] = M[addr]
-        elif op == Op.STG:
-            for t in lanes(exec_m):
-                M[(int(R[t, s0]) + imm) % cfg.mem_size] = R[t, s1]
-        elif op in ATOMIC_OPS:
-            for t in lanes(exec_m):
-                a = (int(R[t, s0]) + imm) % cfg.mem_size
-                old = M[a]
-                if op == Op.ATOMCAS:
-                    if old == R[t, s1]:
-                        M[a] = R[t, s2]
-                elif op == Op.ATOMEXCH:
-                    M[a] = R[t, s1]
-                else:  # ATOMADD
-                    M[a] = _I32(int(old) + int(R[t, s1]))
-                R[t, dst] = old
-        else:
-            raise ValueError(f"alu cannot handle op {Op(op).name}")
 
 
 # --------------------------------------------------------------------------

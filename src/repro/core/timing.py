@@ -23,8 +23,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .interp import popcount
 from .isa import ATOMIC_OPS, F_OP, MEMORY_OPS, Op
+from .stepper import popcount
 
 
 @dataclass(frozen=True)
@@ -67,25 +67,47 @@ def _latency(op: int, cfg: TimingConfig) -> int:
     return cfg.alu_latency
 
 
-def simulate(traces: list[list[tuple[int, int]]],
-             program: np.ndarray,
-             warp_width: int,
-             cfg: TimingConfig = TimingConfig()) -> TimingResult:
-    """GTO issue simulation over per-warp control-flow traces."""
-    prog_ops = np.asarray(program)[:, F_OP]
+def schedule_traces(traces: "list[list[tuple[int, int]]]",
+                    prog_ops: "list[np.ndarray]",
+                    policy: str = "greedy_then_oldest",
+                    cfg: TimingConfig = TimingConfig(),
+                    ) -> tuple[list[tuple[int, int, int]], int, int]:
+    """The one issue-scheduler loop: per-warp traces through one issue port.
+
+    ``prog_ops`` holds each warp's opcode column (warps may run different
+    programs — the per-SM model needs that).  Returns
+    ``(order, cycles, thread_instructions)`` with ``order`` the issued
+    ``(warp, pc, mask)`` slots.  Policies:
+
+    * ``greedy_then_oldest`` — GTO (Table III): stay on the current warp
+      while it is ready; otherwise the oldest (lowest-id) ready warp; if
+      none is ready, fast-forward to the earliest ready time;
+    * ``round_robin``        — rotate over ready warps every slot.
+
+    :func:`simulate` (the Fig 10 IPC model) and
+    :func:`repro.engine.mechanisms.sm.interleave_traces` both delegate
+    here, so latency semantics cannot drift apart.
+    """
     n = len(traces)
     idx = [0] * n
     ready = [0] * n
     lens = [len(t) for t in traces]
     remaining = sum(lens)
-    issues = 0
+    order: list[tuple[int, int, int]] = []
     tinstr = 0
     cycle = 0
     cur = 0
+    rr_next = 0
     while remaining:
-        # GTO: stay on the current warp while it is ready; otherwise pick the
-        # oldest (lowest-id) ready warp; if none is ready, fast-forward.
-        if not (idx[cur] < lens[cur] and ready[cur] <= cycle):
+        if policy == "round_robin":
+            cands = [w for w in range(n) if idx[w] < lens[w]]
+            ready_now = [w for w in cands if ready[w] <= cycle]
+            if not ready_now:
+                cycle = min(ready[w] for w in cands)
+                ready_now = [w for w in cands if ready[w] <= cycle]
+            cur = min(ready_now, key=lambda w: (w - rr_next) % n)
+            rr_next = cur + 1
+        elif not (idx[cur] < lens[cur] and ready[cur] <= cycle):
             cands = [w for w in range(n) if idx[w] < lens[w]]
             ready_now = [w for w in cands if ready[w] <= cycle]
             if ready_now:
@@ -94,14 +116,26 @@ def simulate(traces: list[list[tuple[int, int]]],
                 cycle = min(ready[w] for w in cands)
                 cur = next(w for w in cands if ready[w] <= cycle)
         pc, mask = traces[cur][idx[cur]]
-        op = int(prog_ops[pc]) if 0 <= pc < len(prog_ops) else int(Op.NOP)
+        ops = prog_ops[cur]
+        op = int(ops[pc]) if 0 <= pc < len(ops) else int(Op.NOP)
         idx[cur] += 1
         remaining -= 1
-        issues += 1
+        order.append((cur, pc, mask))
         tinstr += popcount(mask)
         ready[cur] = cycle + _latency(op, cfg)
         cycle += 1
-    return TimingResult(cycles=cycle, issues=issues,
+    return order, cycle, tinstr
+
+
+def simulate(traces: list[list[tuple[int, int]]],
+             program: np.ndarray,
+             warp_width: int,
+             cfg: TimingConfig = TimingConfig()) -> TimingResult:
+    """GTO issue simulation over per-warp control-flow traces."""
+    prog_ops = np.asarray(program)[:, F_OP]
+    order, cycles, tinstr = schedule_traces(
+        traces, [prog_ops] * len(traces), "greedy_then_oldest", cfg)
+    return TimingResult(cycles=cycles, issues=len(order),
                         thread_instructions=tinstr, warp_width=warp_width)
 
 

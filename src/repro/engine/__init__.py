@@ -36,10 +36,13 @@ Layout
   :func:`register_mechanism` decorator for third-party mechanisms;
 * :mod:`repro.engine.adapters`  — the five built-ins: ``simt_stack``,
   ``hanoi``, ``turing_oracle``, ``dualpath``, ``hanoi_jax``;
+* :mod:`repro.engine.mechanisms` — plugin mechanisms beyond the adapter
+  family: ``volta_itps`` (per-thread-PC independent thread scheduling) and
+  ``sm_interleave`` (per-SM multi-warp time-multiplexing);
 * :mod:`repro.engine.sinks`     — pluggable :class:`TraceSink` consumers
   (:class:`MemorySink`, :class:`JsonlSink`, :class:`RingBufferSink`);
 * :mod:`repro.engine.simulator` — the :class:`Simulator` façade with
-  ``run`` / ``run_batch`` / ``compare``.
+  ``run`` / ``run_batch`` / ``run_sm`` / ``compare``.
 
 Adding a mechanism
 ------------------
@@ -51,8 +54,11 @@ Adding a mechanism
     def run_darm(req: SimRequest) -> SimResult:
         ...
 
-Candidate future mechanisms (see ROADMAP): DARM-style branch melding,
-decoupled control flow, and per-SM multi-warp interleaving models.
+New plugins must pass the differential conformance suite
+(``tests/test_conformance.py``): final architectural state must agree with
+``simt_stack`` on every program where both report ``SimStatus.OK``.
+Candidate future mechanisms (see ROADMAP): DARM-style branch melding and
+decoupled control flow.
 """
 from repro.core.isa import MachineConfig
 
@@ -60,14 +66,17 @@ from .registry import (Mechanism, available_mechanisms, get_mechanism,
                        iter_mechanisms, register_mechanism,
                        unregister_mechanism)
 from .sinks import JsonlSink, MemorySink, RingBufferSink, TraceSink
-from .types import SimRequest, SimResult, SimStatus, classify_status
+from .types import (SimRequest, SimResult, SimStatus, SmResult,
+                    classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
 from . import adapters as _adapters            # registers the built-ins
+from . import mechanisms as _mechanisms        # registers the plugins
 
 __all__ = [
     "CompareReport", "CompareRow", "JsonlSink", "MachineConfig", "Mechanism",
     "MemorySink", "RingBufferSink", "SimRequest", "SimResult", "SimStatus",
-    "Simulator", "TraceSink", "as_request", "available_mechanisms",
-    "classify_status", "get_mechanism", "iter_mechanisms",
-    "register_mechanism", "unregister_mechanism",
+    "SmResult", "Simulator", "TraceSink", "as_request",
+    "available_mechanisms", "classify_status", "get_mechanism",
+    "iter_mechanisms", "register_mechanism", "unregister_mechanism",
+    "worst_status",
 ]

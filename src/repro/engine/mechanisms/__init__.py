@@ -1,0 +1,21 @@
+"""Registered mechanism plugins beyond the built-in adapter family.
+
+Each submodule registers one mechanism with the
+:mod:`repro.engine.registry` at import time:
+
+* :mod:`.volta`  — ``volta_itps``: Volta-style independent thread
+  scheduling (per-thread PCs, no reconvergence stack, greedy convergence
+  optimizer with a forward-progress guarantee);
+* :mod:`.sm`     — ``sm_interleave``: a per-SM model that time-multiplexes
+  N warps through any registered single-warp mechanism under a pluggable
+  warp-scheduler policy.
+
+Importing this package (done by ``repro.engine``) registers both.
+"""
+from . import volta, sm  # noqa: F401  (import side effect: registration)
+
+from .sm import SM_POLICIES, build_sm_result, interleave_traces  # noqa: F401
+from .volta import run_volta_itps  # noqa: F401
+
+__all__ = ["SM_POLICIES", "build_sm_result", "interleave_traces",
+           "run_volta_itps"]

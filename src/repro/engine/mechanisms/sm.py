@@ -1,0 +1,140 @@
+"""``sm_interleave`` — a per-SM model: N warps through one issue scheduler.
+
+A streaming multiprocessor runs many warps; its scheduler picks one ready
+warp per slot.  Warps are architecturally independent in this simulator
+(each request carries its own register file and memory image), so the SM
+model composes exactly: every warp executes to completion under any
+registered *single-warp* mechanism, and the SM scheduler time-multiplexes
+their control-flow traces into one latency-aware issue schedule — the same
+trace-driven approach as :mod:`repro.core.timing`, generalized to
+per-warp programs, pluggable policies, and a full SM-level trace.
+
+Policies:
+
+* ``round_robin``        — rotate over ready warps every slot (fair,
+  latency-hiding, worst locality);
+* ``greedy_then_oldest`` — GTO (the paper's Table III scheduler): stay on
+  the current warp while it is ready, else switch to the oldest ready warp.
+
+Request options (``SimRequest.meta``) for the registered mechanism, which
+replicates one request across identical warps:
+
+* ``sm_warps``  (int, default 4)            — warps per SM;
+* ``sm_inner``  (str, default ``"hanoi"``)  — single-warp mechanism name;
+* ``sm_policy`` (str, default ``"round_robin"``).
+
+Heterogeneous warps (different programs / memory images per warp) go
+through :meth:`repro.engine.Simulator.run_sm`, which returns the full
+:class:`~repro.engine.types.SmResult`; the registered mechanism exposes the
+same model through the universal ``SimResult`` schema (warp-0 architectural
+state, SM-level trace, ``meta["sm"]`` holding the aggregate) so
+``run_batch`` / ``compare`` work unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.timing import TimingConfig, schedule_traces
+from repro.core.isa import F_OP
+
+from ..registry import get_mechanism, register_mechanism
+from ..types import SimRequest, SimResult, SmResult, worst_status
+
+SM_POLICIES = ("round_robin", "greedy_then_oldest")
+
+DEFAULT_WARPS = 4
+DEFAULT_INNER = "hanoi"
+DEFAULT_POLICY = "round_robin"
+
+
+def interleave_traces(traces: Sequence[Sequence[tuple[int, int]]],
+                      programs: Sequence[np.ndarray],
+                      policy: str = DEFAULT_POLICY,
+                      tcfg: TimingConfig = TimingConfig(),
+                      ) -> tuple[list[tuple[int, int, int]], int, int]:
+    """Schedule per-warp traces through one SM issue port.
+
+    Returns ``(sm_trace, cycles, thread_instructions)`` where ``sm_trace``
+    is the issue order as ``(warp, pc, mask)`` and ``cycles`` accounts for
+    per-instruction latency with trace-level dependence conservatism (a
+    warp's next instruction waits for its previous one).  Thin façade over
+    :func:`repro.core.timing.schedule_traces` — the one scheduler loop the
+    Fig 10 IPC model also uses — adding policy validation and per-warp
+    opcode extraction.
+    """
+    if policy not in SM_POLICIES:
+        raise ValueError(f"unknown SM policy {policy!r}; "
+                         f"known: {SM_POLICIES}")
+    prog_ops = [np.asarray(p)[:, F_OP] for p in programs]
+    return schedule_traces([list(t) for t in traces], prog_ops, policy, tcfg)
+
+
+def build_sm_result(reqs: Sequence[SimRequest],
+                    results: Sequence[SimResult],
+                    *,
+                    inner: str,
+                    policy: str = DEFAULT_POLICY,
+                    timing_cfg: TimingConfig = TimingConfig(),
+                    wall_time_s: float = 0.0) -> SmResult:
+    """Assemble the SM aggregate from per-warp requests and results."""
+    sm_trace, cycles, tinstr = interleave_traces(
+        [list(r.trace) for r in results],
+        [np.asarray(q.program) for q in reqs], policy, timing_cfg)
+    width = max(q.resolved_cfg().n_threads for q in reqs)
+    steps = len(sm_trace)
+    return SmResult(
+        mechanism="sm_interleave", inner=inner, policy=policy,
+        warps=tuple(results), sm_trace=tuple(sm_trace),
+        status=worst_status([r.status for r in results]),
+        steps=steps, cycles=cycles, thread_instructions=tinstr,
+        utilization=tinstr / max(1, steps * width),
+        wall_time_s=wall_time_s)
+
+
+def _sm_options(req: SimRequest) -> tuple[int, str, str]:
+    n_warps = int(req.meta.get("sm_warps", DEFAULT_WARPS))
+    if n_warps < 1:
+        raise ValueError(f"sm_warps must be >= 1, got {n_warps}")
+    inner = str(req.meta.get("sm_inner", DEFAULT_INNER))
+    policy = str(req.meta.get("sm_policy", DEFAULT_POLICY))
+    return n_warps, inner, policy
+
+
+@register_mechanism(
+    "sm_interleave", backend="numpy", tags=("sm", "multi-warp", "composite"),
+    description="per-SM model: time-multiplexes N identical warps through "
+                "any registered single-warp mechanism (meta: sm_warps, "
+                "sm_inner, sm_policy); SimResult carries warp-0 state, the "
+                "interleaved SM trace, and meta['sm'] = SmResult")
+def _run_sm_interleave(req: SimRequest) -> SimResult:
+    n_warps, inner_name, policy = _sm_options(req)
+    inner = get_mechanism(inner_name)
+    if inner.name == "sm_interleave":
+        raise ValueError("sm_inner must be a single-warp mechanism, "
+                         "not sm_interleave itself")
+    stripped = {k: v for k, v in req.meta.items()
+                if not k.startswith("sm_")}
+    t0 = time.perf_counter()
+    reqs = [dataclasses.replace(req, meta=stripped,
+                                name=f"{req.name or 'warp'}/w{w}")
+            for w in range(n_warps)]
+    results = [inner(q) for q in reqs]
+    sm = build_sm_result(reqs, results, inner=inner.name, policy=policy,
+                         wall_time_s=time.perf_counter() - t0)
+    w0 = results[0]
+    return SimResult(
+        mechanism="sm_interleave", status=sm.status,
+        regs=w0.regs, preds=w0.preds, mem=w0.mem, finished=w0.finished,
+        steps=sm.steps, fuel_left=min(r.fuel_left for r in results),
+        trace=tuple((pc, mask) for _, pc, mask in sm.sm_trace),
+        utilization=sm.utilization,
+        error=next((r.error for r in results if r.error), None),
+        wall_time_s=sm.wall_time_s, meta={"sm": sm})
+
+
+__all__ = ["SM_POLICIES", "DEFAULT_WARPS", "DEFAULT_INNER", "DEFAULT_POLICY",
+           "interleave_traces", "build_sm_result"]

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Sequence
@@ -23,7 +24,7 @@ from repro.core.trace import discrepancy
 
 from .registry import Mechanism, get_mechanism
 from .sinks import TraceSink
-from .types import SimRequest, SimResult
+from .types import SimRequest, SimResult, SmResult
 
 ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
 
@@ -191,11 +192,63 @@ class Simulator:
                    and r.active0 is None
                    for r in reqs)
 
+    # -- per-SM multi-warp execution ----------------------------------------
+
+    def run_sm(self, programs: "ProgramLike | Sequence[ProgramLike]",
+               cfg: MachineConfig | None = None, *,
+               n_warps: int | None = None,
+               inner: str | None = None,
+               policy: str = "round_robin",
+               timing_cfg: TimingConfig = TimingConfig(),
+               sink: TraceSink | None = None,
+               **request_kw) -> SmResult:
+        """Run N warps on one SM through a single-warp mechanism.
+
+        ``programs`` is either one program (replicated across ``n_warps``
+        identical warps, default 4) or a sequence with one entry per warp
+        (heterogeneous SMs — different programs and/or memory images).
+        Each warp executes under ``inner`` (default: this Simulator's
+        mechanism, or ``hanoi`` if that is ``sm_interleave``), then the
+        per-warp traces are time-multiplexed through the SM issue scheduler
+        under ``policy`` (``round_robin`` / ``greedy_then_oldest``).  The
+        returned :class:`~repro.engine.types.SmResult` carries the per-warp
+        ``SimResult``s plus the interleaved ``(warp, pc, mask)`` SM trace
+        and its latency-aware cycle count.
+        """
+        from .mechanisms.sm import build_sm_result
+        if inner is None:
+            inner_name = self._default
+            if inner_name == "sm_interleave":     # default fallback only:
+                inner_name = "hanoi"              # nesting is an error below
+        else:
+            inner_name = get_mechanism(inner).name
+            if inner_name == "sm_interleave":
+                raise ValueError("inner must be a single-warp mechanism, "
+                                 "not sm_interleave itself")
+        if isinstance(programs, (list, tuple)):
+            if n_warps is not None and n_warps != len(programs):
+                raise ValueError(
+                    f"n_warps={n_warps} conflicts with {len(programs)} "
+                    f"per-warp programs")
+            per_warp = list(programs)
+        else:
+            per_warp = [programs] * (4 if n_warps is None else int(n_warps))
+        if not per_warp:
+            raise ValueError("run_sm needs at least one warp")
+        reqs = [as_request(p, cfg, **request_kw) for p in per_warp]
+        t0 = time.perf_counter()
+        results = self.run_batch(reqs, mechanism=inner_name, sink=sink)
+        wall = time.perf_counter() - t0
+        return build_sm_result(reqs, results, inner=inner_name,
+                               policy=policy, timing_cfg=timing_cfg,
+                               wall_time_s=wall)
+
     # -- mechanism comparison (the paper's evaluation as an API) ------------
 
-    def compare(self, mechanisms: Sequence[str],
-                programs: Iterable[ProgramLike],
+    def compare(self, mechanisms: "str | Sequence[str]",
+                programs: Iterable[ProgramLike] | None = None,
                 cfg: MachineConfig | None = None, *,
+                baseline: str | None = None,
                 pairs: Sequence[tuple[str, str]] | None = None,
                 timing: bool = True,
                 timing_warps: int = 4,
@@ -210,12 +263,32 @@ class Simulator:
         ``timing_warps`` identical warps per scheduler).  ``pairs`` defaults
         to all ordered pairs of ``mechanisms``.
 
+        Conveniences: ``mechanisms`` may be a single name, ``baseline``
+        appends a reference mechanism and restricts ``pairs`` to
+        ``(mech, baseline)``, and ``programs=None`` defaults to the paper's
+        benchmark suite — so ``compare("volta_itps",
+        baseline="turing_oracle")`` is a complete evaluation call.
+
         ``timing=False`` skips the (pure-Python, per-trace-slot) timing
         model for callers that only consume discrepancy/utilization: IPC
         fields come back NaN and utilization is taken directly from the
         traces (the same value the timing model would report).
         """
+        if isinstance(mechanisms, str):
+            mechanisms = [mechanisms]
         names = [get_mechanism(m).name for m in mechanisms]
+        if baseline is not None:
+            base = get_mechanism(baseline).name
+            if pairs is None:
+                pairs = [(m, base) for m in names if m != base]
+            if base not in names:
+                names.append(base)
+        if programs is None:
+            from repro.core.programs import make_suite
+            if cfg is None:     # the paper's evaluation config, not the
+                cfg = MachineConfig(n_threads=32, mem_size=256,
+                                    max_steps=60_000)   # 4096-fuel default
+            programs = make_suite(cfg)
         reqs = [as_request(p, cfg, **request_kw) for p in programs]
         # unique program ids (anonymous ndarrays would otherwise collide)
         pids: list[str] = []

@@ -29,6 +29,7 @@ the distinction explicit and uniform:
 from __future__ import annotations
 
 import enum
+import types as _pytypes
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
@@ -36,6 +37,15 @@ import numpy as np
 
 from repro.core.isa import MachineConfig
 from repro.core.trace import trace_tokens as _trace_tokens
+
+
+def _freeze_meta(obj: Any, value: Mapping[str, Any]) -> None:
+    """Normalize a ``meta`` mapping on a frozen dataclass to an immutable
+    view.  ``field(default_factory=dict)`` alone still hands every caller a
+    mutable dict (and ``meta=SHARED_DICT`` a *shared* mutable one) — copying
+    into a ``MappingProxyType`` closes both holes."""
+    object.__setattr__(obj, "meta",
+                       _pytypes.MappingProxyType(dict(value)))
 
 
 class SimStatus(enum.Enum):
@@ -55,6 +65,12 @@ class SimRequest:
     be re-budgeted per request).  ``bsync_skip_pcs`` is consumed only by
     the ``turing_oracle`` mechanism; the others ignore it.
 
+    ``meta`` carries mechanism-specific options that are not part of the
+    universal schema — e.g. ``itps_patience`` for ``volta_itps`` or
+    ``sm_warps`` / ``sm_inner`` / ``sm_policy`` for ``sm_interleave``.
+    Mechanisms ignore keys they do not know.  It is normalized to an
+    immutable mapping in ``__post_init__``.
+
     ``eq=False``: ndarray fields make generated ``__eq__``/``__hash__``
     raise, so requests/results compare and hash by identity — usable as
     set members and dict keys.
@@ -71,6 +87,10 @@ class SimRequest:
     majority_first: bool = True
     bsync_skip_pcs: tuple[int, ...] = ()
     name: str = ""
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        _freeze_meta(self, self.meta)
 
     def resolved_cfg(self) -> MachineConfig:
         if self.fuel is None:
@@ -100,6 +120,9 @@ class SimResult:
     wall_time_s: float = 0.0
     meta: Mapping[str, Any] = field(default_factory=dict)
 
+    def __post_init__(self) -> None:
+        _freeze_meta(self, self.meta)
+
     @property
     def ok(self) -> bool:
         return self.status is SimStatus.OK
@@ -112,6 +135,65 @@ class SimResult:
 
     def trace_tokens(self) -> np.ndarray:
         return _trace_tokens(list(self.trace))
+
+
+#: Severity order used when aggregating warp statuses into one SM status.
+_STATUS_SEVERITY = {SimStatus.OK: 0, SimStatus.OUT_OF_FUEL: 1,
+                    SimStatus.DEADLOCK: 2, SimStatus.ERROR: 3}
+
+
+def worst_status(statuses) -> SimStatus:
+    """The most severe status in ``statuses`` (OK < OUT_OF_FUEL < DEADLOCK
+    < ERROR); OK for an empty sequence."""
+    return max(statuses, key=_STATUS_SEVERITY.__getitem__,
+               default=SimStatus.OK)
+
+
+@dataclass(frozen=True, eq=False)
+class SmResult:
+    """Outcome of running N warps on one SM through a single-warp mechanism.
+
+    The SM model time-multiplexes the warps' control-flow traces through one
+    issue scheduler (``policy``: ``round_robin`` or ``greedy_then_oldest``),
+    so the per-warp architectural results come straight from the inner
+    mechanism while the SM-level schedule — ``sm_trace`` of
+    ``(warp, pc, mask)`` slots and the latency-aware ``cycles`` — reflects
+    the interleaving.  ``eq=False`` for the same identity-comparison reason
+    as :class:`SimResult`.
+    """
+
+    mechanism: str
+    inner: str
+    policy: str
+    warps: tuple[SimResult, ...]
+    sm_trace: tuple[tuple[int, int, int], ...]
+    status: SimStatus                 # worst across warps
+    steps: int                        # total SM issue slots
+    cycles: int                       # latency-aware schedule length
+    thread_instructions: int          # sum of active-mask popcounts
+    utilization: float                # SIMD utilization over the SM trace
+    wall_time_s: float = 0.0
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        _freeze_meta(self, self.meta)
+
+    @property
+    def n_warps(self) -> int:
+        return len(self.warps)
+
+    @property
+    def ok(self) -> bool:
+        return self.status is SimStatus.OK
+
+    @property
+    def ipc(self) -> float:
+        """Thread-level IPC of the interleaved SM schedule."""
+        return self.thread_instructions / max(1, self.cycles)
+
+    @property
+    def warp_ipc(self) -> float:
+        return self.steps / max(1, self.cycles)
 
 
 def classify_status(*, finished: int, full_mask: int, fuel_left: int,

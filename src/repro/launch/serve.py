@@ -15,6 +15,9 @@ Usage:
   python -m repro.launch.serve --arch rwkv6-3b --batch 4 --prompt-len 16 \\
       --gen-len 32
   python -m repro.launch.serve --mode sim --mechanism hanoi_jax --batch 64
+  python -m repro.launch.serve --mode sim --mechanism volta_itps --batch 16
+  python -m repro.launch.serve --mode sim --sm-warps 8 --sm-policy \\
+      greedy_then_oldest --mechanism hanoi --bench RBFS0
 """
 from __future__ import annotations
 
@@ -90,7 +93,7 @@ def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
 def _sim_main(args) -> None:
     from repro.core import MachineConfig
     from repro.core.programs import make_suite
-    from repro.engine import SimRequest
+    from repro.engine import SimRequest, Simulator
 
     cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
     suite = make_suite(cfg, datasets=1)
@@ -98,6 +101,16 @@ def _sim_main(args) -> None:
     if bench is None:
         raise SystemExit(f"unknown benchmark {args.bench!r}; available: "
                          + ", ".join(b.name for b in suite))
+    if args.sm_warps:
+        # per-SM mode: N warps of the benchmark through one issue scheduler
+        sim = Simulator("hanoi")
+        sm = sim.run_sm(bench, cfg, n_warps=args.sm_warps,
+                        inner=args.mechanism, policy=args.sm_policy)
+        print(f"[serve:sim] SM x{sm.n_warps} warps of {args.bench} via "
+              f"{sm.inner} ({sm.policy}): status={sm.status.value} "
+              f"slots={sm.steps} cycles={sm.cycles} ipc={sm.ipc:.2f} "
+              f"util={sm.utilization:.3f}")
+        return
     rng = np.random.default_rng(0)
     reqs = [SimRequest(program=bench.program, cfg=cfg,
                        init_mem=rng.integers(0, 8, size=cfg.mem_size)
@@ -118,9 +131,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--mechanism", default="hanoi_jax",
-                    help="[sim] control-flow mechanism to serve with")
+                    help="[sim] control-flow mechanism to serve with "
+                         "(any registered name, e.g. volta_itps)")
     ap.add_argument("--bench", default="GAUS0",
                     help="[sim] benchmark program to serve")
+    ap.add_argument("--sm-warps", type=int, default=0,
+                    help="[sim] run N warps per SM through --mechanism "
+                         "(0 = single-warp batch mode)")
+    ap.add_argument("--sm-policy", default="round_robin",
+                    choices=["round_robin", "greedy_then_oldest"],
+                    help="[sim] SM warp-scheduler policy for --sm-warps")
     args = ap.parse_args()
     if args.mode == "sim":
         _sim_main(args)

@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the repro test suite."""
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-goldens", action="store_true", default=False,
+        help="rewrite the golden-trace fixtures under tests/goldens/ from "
+             "the current engines instead of diffing against them")

@@ -3,6 +3,21 @@
 Lives outside the test modules (and imports no hypothesis) so that
 benchmark/property consumers can build the same If/While/BREAK program
 distribution regardless of whether hypothesis is installed.
+
+Two distributions:
+
+* ``make_program(seed, n_bx)`` — the original If/While/BREAK nest
+  distribution, unchanged (bit-identical rng stream) so the long-standing
+  property suites keep exercising exactly the same programs;
+* ``make_program(seed, n_bx, sync_features=True)`` — additionally weaves in
+  the synchronization-heavy shapes the multi-mechanism conformance suite
+  needs: top-level WARPSYNC joins, a Fig 3/7-style spinlock region (CAS
+  acquire loop + YIELD + observable critical section + EXCH release), and a
+  BREAK loop with a nested inner While (divergence-region depth >= 2).
+  These programs deadlock pre-Volta by design (simt_stack has no YIELD),
+  which is exactly what the differential suite's "agree wherever both
+  finish" contract is for.  Memory is widened so the lock/counter cells sit
+  above every lane-private address.
 """
 import numpy as np
 
@@ -13,6 +28,12 @@ W = 8
 MEM = 64
 BASE_CFG = MachineConfig(n_threads=W, n_regs=16, n_preds=4, n_bx=8,
                          mem_size=MEM, max_steps=20_000)
+
+# sync-feature programs get a widened memory so the spinlock's shared cells
+# cannot collide with lane-private reads (cells < 4W) or writes (< 8W)
+SYNC_MEM = 96
+LOCK_CELL = 8 * W              # 64: the mutex
+COUNTER_CELL = 8 * W + 1       # 65: the observable critical-section counter
 
 # lane-private address offsets: lower half of memory is read-only input,
 # upper half is written at lane-private cells
@@ -75,17 +96,101 @@ def _node(rng, depth: int, loop_level: int) -> "Seq | If | While | Raw":
                       body=body, break_pred=brk)])
 
 
-def make_program(seed: int, n_bx: int):
+_SYNC_UID = [0]    # unique label suffixes across spinlock regions
+
+
+def _spinlock_node() -> Raw:
+    """A Fig 3/7-style spinlock region with an *observable* critical section.
+
+    Mirrors ``programs.SPINLOCK_ASM`` (BSSY bracket, YIELD at the loop head
+    so Hanoi's sibling switch can reach the lock holder, CAS acquire,
+    non-atomic counter increment, EXCH release) on dedicated shared cells
+    above the lane-private range.  The final state is schedule-invariant:
+    the lock cell ends 0, the counter ends W (mutual exclusion), every
+    lane's last CAS returned 0 and its EXCH returned 1 — only the *transit*
+    registers R14/R15 (not in CHECK_REGS) ever hold schedule-dependent
+    values.  Top-level only: R14/R15 double as Bx spill registers inside
+    deeply nested regions, and no spill is live between top-level regions.
+
+    The lock cell is freed by ``make_program``'s init-mem, NOT by a runtime
+    store: on a per-thread-PC machine a straggler lane reaching a runtime
+    "zero the lock" store while another lane holds the lock would break
+    mutual exclusion — the schedule-invariance argument above needs the
+    protocol to be self-contained.
+    """
+    uid = _SYNC_UID[0]
+    _SYNC_UID[0] += 1
+    return Raw([
+        "MOV R12, 0",
+        "MOV R13, 1",
+        f"BSSY B0, slk_end_{uid}",
+        f"slk_loop_{uid}:",
+        "YIELD",
+        f"ATOMCAS R14, [R12+{LOCK_CELL}], R12, R13",
+        "ISETP.NE P3, R14, 0",
+        f"@P3 BRA slk_loop_{uid}",
+        f"LDG R15, [R12+{COUNTER_CELL}]",    # critical section: counter++
+        "IADDI R15, R15, 1",
+        f"STG [R12+{COUNTER_CELL}], R15",
+        f"ATOMEXCH R14, [R12+{LOCK_CELL}], R12",
+        f"slk_end_{uid}:",
+        "BSYNC B0",
+    ])
+
+
+def _break_nested_while(rng) -> Seq:
+    """A BREAK loop whose body contains a nested While: divergence-region
+    depth >= 2 under an early-exit-past-BSYNC region (the Fig 6 shape the
+    compiler dedicates a Bx register to)."""
+    inner = Seq([Raw(["MOV R10, 0"]),
+                 While(cond=["ISETP.LT P1, R10, 2"], pred=1,
+                       body=Seq([Raw(["IADDI R10, R10, 1"]), _raw(rng)]))])
+    bound = int(rng.integers(2, 5))
+    body = Seq([Raw([f"ISETP.GT P2, R5, {int(rng.integers(4, 9))}"]),
+                Raw(["IADDI R9, R9, 1"]), inner])
+    return Seq([Raw(["MOV R9, 0"]),
+                While(cond=[f"ISETP.LT P0, R9, {bound}"], pred=0,
+                      body=body, break_pred=2)])
+
+
+def make_program(seed: int, n_bx: int, *, sync_features: bool = False):
+    """Build one random program; returns ``((prog, mem), cfg)`` or
+    ``(None, cfg)`` for legitimately rejected shapes.
+
+    ``sync_features=False`` reproduces the historical distribution exactly
+    (same rng stream, same MachineConfig).  ``sync_features=True`` draws the
+    extra constructs from an independent rng so the base shape for a given
+    seed stays recognizable, and widens ``mem_size`` for the shared cells.
+    """
     rng = np.random.default_rng(seed)
-    ast = Seq([Raw(["LANEID R1", "MOVR R2, R1"]),
-               _node(rng, 0, 0),
-               _node(rng, 0, 0)])
+    base = [Raw(["LANEID R1", "MOVR R2, R1"]),
+            _node(rng, 0, 0),
+            _node(rng, 0, 0)]
     cfg = BASE_CFG._replace(n_bx=n_bx)
+    if sync_features:
+        srng = np.random.default_rng(seed ^ 0x5F3759DF)
+        full = (1 << W) - 1
+        items = base[:2]
+        if srng.integers(0, 2):
+            items.append(Raw([f"WARPSYNC {full}"]))   # top-level full join
+        items.append(_spinlock_node())
+        items.append(base[2])
+        if srng.integers(0, 2):
+            items.append(_break_nested_while(srng))
+        if srng.integers(0, 2):
+            items.append(Raw([f"WARPSYNC {full}"]))
+        ast = Seq(items)
+        cfg = cfg._replace(mem_size=SYNC_MEM)
+    else:
+        ast = Seq(base)
     try:
         prog = compile_structured(ast, cfg)
     except ValueError:   # BREAK under spill pressure: legitimately rejected
         return None, cfg
-    mem = rng.integers(0, 8, size=MEM).astype(np.int32)
+    mem = rng.integers(0, 8, size=cfg.mem_size).astype(np.int32)
+    if sync_features:
+        mem[LOCK_CELL] = 0          # the mutex must start free
+        mem[COUNTER_CELL] = 0       # counter starts 0 -> must end W
     return (prog, mem), cfg
 
 

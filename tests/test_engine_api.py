@@ -39,7 +39,7 @@ def _bench(name):
 def test_builtin_mechanisms_registered():
     names = available_mechanisms()
     for expected in ("simt_stack", "hanoi", "hanoi_jax", "dualpath",
-                     "turing_oracle"):
+                     "turing_oracle", "volta_itps", "sm_interleave"):
         assert expected in names
 
 
@@ -281,6 +281,40 @@ def test_sink_attached_at_construction_sees_batches():
     sim.run_batch(benches, CFG)
     assert [run["meta"]["program"] for run in sink.runs] == \
         ["HOTS0", "DIAMOND"]
+
+
+# ---------------------------------------------------------------------------
+# meta immutability (frozen dataclasses must not leak shared-mutable state)
+# ---------------------------------------------------------------------------
+
+def test_result_meta_is_immutable_and_unshared():
+    """``field(default_factory=dict)`` on a frozen dataclass still hands out
+    a caller-mutable dict; the normalized MappingProxyType must reject
+    writes on both the default and an explicitly provided mapping."""
+    a = SIM.run(_bench("DIAMOND"), CFG)
+    b = SIM.run(_bench("DIAMOND"), CFG)
+    with pytest.raises(TypeError):
+        a.meta["x"] = 1                          # default meta: read-only
+    assert a.meta is not b.meta
+
+    src = {"k": 1}
+    req = SimRequest(program=_bench("DIAMOND").program, cfg=CFG, meta=src)
+    with pytest.raises(TypeError):
+        req.meta["k"] = 2                        # explicit meta: read-only
+    src["k"] = 99                                # and detached from the
+    assert req.meta["k"] == 1                    # caller's dict
+
+
+def test_request_meta_reaches_mechanisms():
+    """meta options flow through run/as_request to the mechanism: a tiny
+    itps patience forces the fair scheduler far more often, changing the
+    volta schedule (but never the architectural results)."""
+    b = _bench("RBFS0")
+    default = SIM.run(b, CFG, mechanism="volta_itps")
+    fair = SIM.run(b, CFG, mechanism="volta_itps", meta={"itps_patience": 1})
+    assert default.ok and fair.ok
+    assert default.trace != fair.trace
+    np.testing.assert_array_equal(default.mem, fair.mem)
 
 
 # ---------------------------------------------------------------------------
