@@ -10,14 +10,19 @@ any mechanism by name:
    (the paper's Fig 9 discrepancy metric) on a BFS-like benchmark;
 4. show the Volta-style per-thread-PC scheduler's forward-progress
    guarantee (the YIELD-less spinlock terminates where Hanoi hangs) and a
-   per-SM multi-warp interleaving run.
+   per-SM multi-warp interleaving run;
+5. drive the queue-fed simulation service end to end: mixed-mechanism
+   admission, signature coalescing onto the native vmap batch runner, a
+   sharded (SM, policy) cell, rotating JSONL archival, and service stats.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 from repro.core import MachineConfig, disassemble
 from repro.core.programs import (fig6_program, make_suite,
                                  spinlock_no_yield_program, spinlock_program)
-from repro.engine import Simulator, SimStatus
+from repro.engine import RotatingJsonlSink, Simulator, SimStatus
 
 W = 8
 CFG = MachineConfig(n_threads=W, max_steps=40_000)
@@ -71,4 +76,40 @@ print(f"\n=== per-SM: 4 warps of RBFS0 under GTO ===")
 print(f"status={sm.status.value} slots={sm.steps} cycles={sm.cycles} "
       f"thread-IPC={sm.ipc:.2f} util={sm.utilization:.3f}")
 assert sm.ok
+
+# --- 5. the simulation service: coalesced, sharded, archived ----------------
+from repro.service import SimulationService
+
+suite8 = make_suite(CFG, datasets=1)
+benches = [b for b in suite8 if b.name in ("HOTS0", "GAUS0", "RBFS0",
+                                           "DIAMOND")]
+with tempfile.TemporaryDirectory() as tmp:
+    archive = RotatingJsonlSink(tmp, max_bytes=1 << 20)
+    with SimulationService(default_mechanism="hanoi_jax", max_batch=8,
+                           max_wait_s=0.01, workers=2,
+                           archive=archive) as svc:
+        # mixed admission: a homogeneous hanoi_jax group + numpy singles
+        tickets = [svc.submit(b, CFG) for b in benches]            # jax
+        tickets += [svc.submit(benches[0], CFG, mechanism=m)       # numpy
+                    for m in ("hanoi", "simt_stack")]
+        cell = svc.submit_sm(benches[2], CFG, n_warps=4, inner="hanoi",
+                             policy="greedy_then_oldest")          # SM shard
+        svc.flush()
+        results = [t.result() for t in tickets]
+        sm_cell = cell.result()
+        stats = svc.stats()
+    archive.flush()
+    archive.close()
+    print("\n=== simulation service: one queue over every mechanism ===")
+    print(f"completed={stats.completed} (sm_jobs={stats.sm_jobs}) "
+          f"batches={stats.batches} native={stats.native_batches} "
+          f"(x{stats.native_warps} warps) mean-fill={stats.mean_fill:.1f}")
+    print(f"p50={stats.latency_p50_s * 1e3:.1f}ms "
+          f"p99={stats.latency_p99_s * 1e3:.1f}ms "
+          f"archived {archive.runs_written} runs -> "
+          f"{len(archive.paths)} file(s)")
+    # the homogeneous hanoi_jax group went through the native vmap runner
+    assert all(r.meta["service"]["native"] for r in results[:4])
+    assert all(r.ok for r in results) and sm_cell.ok
+    assert archive.runs_written == stats.completed - 1 + sm_cell.n_warps
 print("\nquickstart OK")

@@ -40,9 +40,13 @@ Layout
   family: ``volta_itps`` (per-thread-PC independent thread scheduling) and
   ``sm_interleave`` (per-SM multi-warp time-multiplexing);
 * :mod:`repro.engine.sinks`     — pluggable :class:`TraceSink` consumers
-  (:class:`MemorySink`, :class:`JsonlSink`, :class:`RingBufferSink`);
+  (:class:`MemorySink`, :class:`JsonlSink`, :class:`RingBufferSink`, the
+  rotating archival :class:`RotatingJsonlSink`);
 * :mod:`repro.engine.simulator` — the :class:`Simulator` façade with
-  ``run`` / ``run_batch`` / ``run_sm`` / ``compare``.
+  ``run`` / ``run_batch`` / ``run_sm`` / ``compare``; batch dispatch is
+  shared with :mod:`repro.service` (the queue-fed simulation service —
+  admission coalescing, native-batch routing, sharded SM cells, service
+  metrics).
 
 Adding a mechanism
 ------------------
@@ -65,7 +69,8 @@ from repro.core.isa import MachineConfig
 from .registry import (Mechanism, available_mechanisms, get_mechanism,
                        iter_mechanisms, register_mechanism,
                        unregister_mechanism)
-from .sinks import JsonlSink, MemorySink, RingBufferSink, TraceSink
+from .sinks import (JsonlSink, MemorySink, RingBufferSink, RotatingJsonlSink,
+                    TraceSink, feed_result)
 from .types import (SimRequest, SimResult, SimStatus, SmResult,
                     classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
@@ -74,9 +79,9 @@ from . import mechanisms as _mechanisms        # registers the plugins
 
 __all__ = [
     "CompareReport", "CompareRow", "JsonlSink", "MachineConfig", "Mechanism",
-    "MemorySink", "RingBufferSink", "SimRequest", "SimResult", "SimStatus",
-    "SmResult", "Simulator", "TraceSink", "as_request",
-    "available_mechanisms", "classify_status", "get_mechanism",
-    "iter_mechanisms", "register_mechanism", "unregister_mechanism",
-    "worst_status",
+    "MemorySink", "RingBufferSink", "RotatingJsonlSink", "SimRequest",
+    "SimResult", "SimStatus", "SmResult", "Simulator", "TraceSink",
+    "as_request", "available_mechanisms", "classify_status", "feed_result",
+    "get_mechanism", "iter_mechanisms", "register_mechanism",
+    "unregister_mechanism", "worst_status",
 ]

@@ -23,6 +23,7 @@ Each adapter funnels through :func:`~repro.engine.types.classify_status`, so
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Sequence
 
@@ -35,7 +36,7 @@ from repro.core.dualpath import run_dual_path
 from .registry import register_mechanism
 from .types import SimRequest, SimResult, classify_status
 
-__all__ = ["result_from_runresult"]
+__all__ = ["PAD_QUANTUM", "padded_len", "result_from_runresult"]
 
 
 def result_from_runresult(mechanism: str, r: RunResult, req: SimRequest,
@@ -120,11 +121,15 @@ def _run_dualpath(req: SimRequest) -> SimResult:
 # vectorized JAX mechanism (lazy import: keep numpy-only paths jax-free)
 # ---------------------------------------------------------------------------
 
-_PAD_QUANTUM = 32      # pad program length up to a multiple -> fewer recompiles
+PAD_QUANTUM = 32       # pad program length up to a multiple -> fewer recompiles
 
 
-def _padded_len(n: int) -> int:
-    return -(-n // _PAD_QUANTUM) * _PAD_QUANTUM
+def padded_len(n: int) -> int:
+    """The padding class of an ``n``-instruction program: its length rounded
+    up to the next :data:`PAD_QUANTUM` multiple.  Programs in the same class
+    compile to (and batch into) the same XLA executable; the service planner
+    uses it as part of the execution signature."""
+    return -(-n // PAD_QUANTUM) * PAD_QUANTUM
 
 
 def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
@@ -147,23 +152,41 @@ def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
         error=error, wall_time_s=wall_time_s)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_batch_runner(cfg, majority_first: bool):
+    """One jitted vmap-over-(warps, programs) executable per (cfg,
+    majority_first).  The jit boundary is essential for service throughput:
+    a bare ``jax.vmap(one)`` re-traces the whole state machine on *every*
+    batch call (slower than the per-request path, whose inner ``_run`` jit
+    caches), whereas this callable re-traces only per new (batch size,
+    padded length) shape and then replays the cached executable."""
+    import jax
+    from repro.core.hanoi import _run, init_state
+
+    def one(prog, skip, reg, mem, lane):
+        st = init_state(prog.shape[0], cfg, init_regs=reg, init_mem=mem,
+                        lane_ids=lane)
+        return _run(prog, st, skip, cfg, majority_first)
+
+    return jax.jit(jax.vmap(one))
+
+
 def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
     """Native batched execution: vmap over warps AND over (padded) programs.
 
     All requests must share cfg / majority_first / active0=None (the
-    Simulator checks homogeneity before dispatching here).  Programs of
-    different lengths are padded with unreachable EXITs to one shape so a
-    single compiled executable serves the whole batch.
+    planner's execution signature guarantees it before dispatching here).
+    Programs of different lengths are padded with unreachable EXITs to one
+    shape so a single compiled executable serves the whole batch.
     """
     import jax
     import jax.numpy as jnp
-    from repro.core.hanoi import _run, init_state
     from repro.core.isa import Op
 
     cfg = reqs[0].resolved_cfg()
     majority_first = reqs[0].majority_first
     W = cfg.n_threads
-    L = _padded_len(max(int(np.asarray(r.program).shape[0]) for r in reqs))
+    L = padded_len(max(int(np.asarray(r.program).shape[0]) for r in reqs))
 
     progs = np.zeros((len(reqs), L, 8), np.int32)
     progs[:, :, 0] = int(Op.EXIT)                      # unreachable pad
@@ -182,14 +205,11 @@ def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
         if r.lane_ids is not None:
             lanes[i] = np.asarray(r.lane_ids, np.int32).reshape(W)
 
-    def one(prog, skip, reg, mem, lane):
-        st = init_state(L, cfg, init_regs=reg, init_mem=mem, lane_ids=lane)
-        return _run(prog, st, skip, cfg, majority_first)
-
+    run_batched = _jitted_batch_runner(cfg, majority_first)
     t0 = time.perf_counter()
-    states = jax.vmap(one)(jnp.asarray(progs), jnp.asarray(skips),
-                           jnp.asarray(regs), jnp.asarray(mems),
-                           jnp.asarray(lanes))
+    states = run_batched(jnp.asarray(progs), jnp.asarray(skips),
+                         jnp.asarray(regs), jnp.asarray(mems),
+                         jnp.asarray(lanes))
     jax.block_until_ready(states.regs)
     wall = (time.perf_counter() - t0) / max(1, len(reqs))
     per_warp = [jax.tree_util.tree_map(lambda x, i=i: x[i], states)
@@ -212,7 +232,7 @@ def _run_hanoi_jax(req: SimRequest) -> SimResult:
         req.program, cfg, init_regs=req.init_regs, init_mem=req.init_mem,
         lane_ids=req.lane_ids, active0=req.active0,
         majority_first=req.majority_first,
-        pad_to=_padded_len(int(np.asarray(req.program).shape[0])))
+        pad_to=padded_len(int(np.asarray(req.program).shape[0])))
     import jax
     jax.block_until_ready(state.regs)
     return _jax_result(req, state, time.perf_counter() - t0)

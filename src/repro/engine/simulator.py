@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Sequence
 
@@ -23,7 +22,7 @@ from repro.core.timing import TimingConfig, ipc_delta, simulate
 from repro.core.trace import discrepancy
 
 from .registry import Mechanism, get_mechanism
-from .sinks import TraceSink
+from .sinks import TraceSink, feed_result
 from .types import SimRequest, SimResult, SmResult
 
 ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
@@ -163,34 +162,26 @@ class Simulator:
                   **request_kw) -> list[SimResult]:
         """Run many requests under one mechanism, preserving order.
 
-        The JAX engine executes homogeneous batches natively (one vmap over
-        warps and padded programs); heterogeneous batches fall back to
-        per-request runs.  numpy mechanisms run sequentially unless the
-        Simulator was built with ``max_workers`` (see class docstring).
+        Grouping and routing are delegated to the service planner
+        (:mod:`repro.service.planner`) — the same dispatch path the
+        queue-fed :class:`~repro.service.SimulationService` uses: requests
+        are grouped by execution signature, every signature-homogeneous
+        group with a native ``batch_runner`` executes as one vmap batch
+        (a *mixed* batch no longer forfeits native execution for its
+        homogeneous sub-groups), and the per-request remainder runs
+        sequentially unless the Simulator was built with ``max_workers``
+        (see class docstring).
         """
         mech = get_mechanism(mechanism or self._default)
         reqs = [as_request(p, cfg, **request_kw) for p in programs]
         if not reqs:
             return []
-        if mech.batch_runner is not None and self._homogeneous(reqs):
-            results = mech.batch_runner(reqs)
-        elif (mech.backend == "numpy" and len(reqs) > 1
-                and self._max_workers is not None):
-            with ThreadPoolExecutor(max_workers=self._max_workers) as pool:
-                results = list(pool.map(mech, reqs))
-        else:
-            results = [mech(r) for r in reqs]
+        from repro.service.planner import execute_plan   # lazy: no cycle at
+        results = execute_plan(mech, reqs,               # package import time
+                               max_workers=self._max_workers)
         for req, res in zip(reqs, results):
             self._feed_sink(sink or self._sink, mech, req, res)
         return results
-
-    @staticmethod
-    def _homogeneous(reqs: Sequence[SimRequest]) -> bool:
-        r0 = reqs[0]
-        return all(r.resolved_cfg() == r0.resolved_cfg()
-                   and r.majority_first == r0.majority_first
-                   and r.active0 is None
-                   for r in reqs)
 
     # -- per-SM multi-warp execution ----------------------------------------
 
@@ -345,11 +336,7 @@ class Simulator:
     @staticmethod
     def _feed_sink(sink: TraceSink | None, mech: Mechanism,
                    req: SimRequest, result: SimResult) -> None:
-        if sink is None:
-            return
-        sink.begin({"mechanism": mech.name, "program": req.name,
-                    "n_threads": req.resolved_cfg().n_threads,
-                    "program_len": int(np.asarray(req.program).shape[0])})
-        for pc, mask in result.trace:
-            sink.emit(pc, mask)
-        sink.end(result)
+        feed_result(sink, result,
+                    {"mechanism": mech.name, "program": req.name,
+                     "n_threads": req.resolved_cfg().n_threads,
+                     "program_len": int(np.asarray(req.program).shape[0])})

@@ -15,11 +15,22 @@ Built-ins:
   archival format for offline diffing at service scale;
 * :class:`RingBufferSink` — keeps only the last ``capacity`` slots, the
   flight-recorder mode for long-running / high-traffic simulation where full
-  traces would be unbounded.
+  traces would be unbounded;
+* :class:`RotatingJsonlSink` — the durable service archive: buffered,
+  written by a background thread, rotated across ``prefix-NNNNN.jsonl``
+  files by size, and safe for concurrent producers (whole runs are
+  enqueued atomically, so events from different workers never interleave).
+
+:func:`feed_result` replays a finished :class:`SimResult` into any sink as
+the normalized ``begin``/``emit``/``end`` stream — the one feeding path the
+Simulator façade and the simulation service both use.
 """
 from __future__ import annotations
 
 import json
+import os
+import queue
+import threading
 from collections import deque
 from typing import Any, IO, Mapping
 
@@ -73,6 +84,27 @@ class MemorySink(TraceSink):
         return [r["trace"] for r in self.runs]
 
 
+# One encoder per archival event shape, shared by JsonlSink and
+# RotatingJsonlSink so the two writers can never fork the format the
+# offline diffing tools read.
+
+def begin_event(meta: Mapping[str, Any]) -> dict[str, Any]:
+    return {"event": "begin", **dict(meta)}
+
+
+def issue_event(pc: int, mask: int) -> dict[str, Any]:
+    return {"event": "issue", "pc": int(pc), "mask": int(mask)}
+
+
+def end_event(result: SimResult) -> dict[str, Any]:
+    return {"event": "end", "mechanism": result.mechanism,
+            "status": result.status.value, "steps": result.steps,
+            "fuel_left": result.fuel_left,
+            "finished": int(result.finished),
+            "utilization": result.utilization,
+            "error": result.error}
+
+
 class JsonlSink(TraceSink):
     """Streams events as JSON lines to ``path`` (or an open file object)."""
 
@@ -90,23 +122,159 @@ class JsonlSink(TraceSink):
         self.events_written += 1
 
     def begin(self, meta: Mapping[str, Any]) -> None:
-        self._write({"event": "begin", **dict(meta)})
+        self._write(begin_event(meta))
 
     def emit(self, pc: int, mask: int) -> None:
-        self._write({"event": "issue", "pc": int(pc), "mask": int(mask)})
+        self._write(issue_event(pc, mask))
 
     def end(self, result: SimResult) -> None:
-        self._write({"event": "end", "mechanism": result.mechanism,
-                     "status": result.status.value, "steps": result.steps,
-                     "fuel_left": result.fuel_left,
-                     "finished": int(result.finished),
-                     "utilization": result.utilization,
-                     "error": result.error})
+        self._write(end_event(result))
         self._fh.flush()
 
     def close(self) -> None:
         if self._owns and not self._fh.closed:
             self._fh.close()
+
+
+def feed_result(sink: "TraceSink | None", result: SimResult,
+                meta: Mapping[str, Any]) -> None:
+    """Replay one finished result into ``sink`` as the normalized stream."""
+    if sink is None:
+        return
+    sink.begin(meta)
+    for pc, mask in result.trace:
+        sink.emit(pc, mask)
+    sink.end(result)
+
+
+class RotatingJsonlSink(TraceSink):
+    """Durable archival writer: buffered, background-flushed, size-rotated.
+
+    Events for the current run are buffered in memory (per producer thread)
+    and enqueued as one atomic chunk at ``end()``; a single writer thread
+    drains the queue, appending to ``{directory}/{prefix}-NNNNN.jsonl`` and
+    starting a new file once the current one would exceed ``max_bytes``
+    (a single run larger than ``max_bytes`` still lands in one file — runs
+    are never split across rotations).
+
+    Because the unit of writing is a whole run, multiple service workers
+    can drive one sink through the ordinary ``begin``/``emit``/``end``
+    protocol without interleaving each other's events.  ``flush()`` blocks
+    until every enqueued run is on disk; ``close()`` flushes and joins the
+    writer.
+
+    IO failures (disk full, directory removed) never wedge producers: the
+    writer records the first exception in ``write_error``, then keeps
+    draining and *dropping* chunks (counted in ``runs_dropped``) so
+    ``end()``/``flush()`` stay non-blocking.  Callers that need durability
+    guarantees check ``write_error`` after ``flush()``.
+    """
+
+    def __init__(self, directory: str, *, prefix: str = "traces",
+                 max_bytes: int = 8 << 20, queue_size: int = 1024) -> None:
+        if max_bytes <= 0:
+            raise ValueError("max_bytes must be positive")
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.prefix = prefix
+        self.max_bytes = int(max_bytes)
+        self.paths: list[str] = []
+        self.runs_written = 0
+        self.runs_dropped = 0                 # chunks dropped after an error
+        self.bytes_written = 0
+        self.write_error: Exception | None = None   # first writer failure
+        self._local = threading.local()
+        self._q: "queue.Queue[str | None]" = queue.Queue(maxsize=queue_size)
+        self._fh: IO[str] | None = None
+        self._cur_bytes = 0
+        self._closed = False
+        self._writer = threading.Thread(target=self._drain, daemon=True,
+                                        name="rotating-jsonl-writer")
+        self._writer.start()
+
+    # -- producer side (per-thread run buffers) -----------------------------
+
+    def _lines(self) -> list[str]:
+        lines = getattr(self._local, "lines", None)
+        if lines is None:
+            lines = self._local.lines = []
+        return lines
+
+    def _append(self, obj: Mapping[str, Any]) -> None:
+        if self._closed:
+            raise RuntimeError("RotatingJsonlSink is closed")
+        self._lines().append(json.dumps(obj, separators=(",", ":")) + "\n")
+
+    def begin(self, meta: Mapping[str, Any]) -> None:
+        self._lines().clear()
+        self._append(begin_event(meta))
+
+    def emit(self, pc: int, mask: int) -> None:
+        self._append(issue_event(pc, mask))
+
+    def end(self, result: SimResult) -> None:
+        self._append(end_event(result))
+        lines = self._lines()
+        self._q.put("".join(lines))
+        lines.clear()
+
+    # -- writer thread ------------------------------------------------------
+
+    def _rotate(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+        path = os.path.join(self.directory,
+                            f"{self.prefix}-{len(self.paths):05d}.jsonl")
+        self._fh = open(path, "w", encoding="utf-8")
+        self._cur_bytes = 0
+        self.paths.append(path)
+
+    def _drain(self) -> None:
+        while True:
+            chunk = self._q.get()
+            try:
+                if chunk is None:
+                    break
+                if self.write_error is not None:
+                    self.runs_dropped += 1       # degraded: ack + drop
+                    continue
+                if (self._fh is None
+                        or (self._cur_bytes > 0
+                            and self._cur_bytes + len(chunk)
+                            > self.max_bytes)):
+                    self._rotate()
+                self._fh.write(chunk)
+                self._fh.flush()
+                self._cur_bytes += len(chunk)
+                self.bytes_written += len(chunk)
+                self.runs_written += 1
+            except Exception as exc:             # disk full, dir deleted, ...
+                # the writer must keep draining and acking chunks: dying
+                # here would wedge flush() in _q.join() and, once the queue
+                # fills, block every producer inside end()
+                self.write_error = exc
+                self.runs_dropped += 1
+            finally:
+                self._q.task_done()
+        try:
+            if self._fh is not None:
+                self._fh.close()
+        except Exception as exc:
+            self.write_error = self.write_error or exc
+        self._fh = None
+
+    # -- control ------------------------------------------------------------
+
+    def flush(self) -> None:
+        """Block until every enqueued run has been written to disk."""
+        self._q.join()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)
+        self._writer.join(timeout=30)
 
 
 class RingBufferSink(TraceSink):

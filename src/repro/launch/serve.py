@@ -6,16 +6,21 @@ mesh (TPU).  Prefill is teacher-forced through ``decode_step`` position by
 position for windowed/recurrent caches' ring semantics — the compiled decode
 step is the same function the decode_32k / long_500k dry-run cells lower.
 
-``serve_simulations`` is the second endpoint: it takes a batch of warp
-simulation requests and dispatches them through the unified ``repro.engine``
-API (vmap-batched on the JAX mechanism) — the seed of the ROADMAP's
-production-scale simulation service.
+``serve_simulations`` is the second endpoint: a thin client of
+``repro.service.SimulationService`` — the queue-fed, coalescing, sharded
+simulation service.  Requests are admitted one by one, coalesced by
+execution signature, routed to the vmap-batched JAX ``batch_runner`` when
+homogeneous, archived through a (rotating) JSONL sink, and reported with
+service metrics (queue depth, latency percentiles, warps/s, batch fill).
 
 Usage:
   python -m repro.launch.serve --arch rwkv6-3b --batch 4 --prompt-len 16 \\
       --gen-len 32
   python -m repro.launch.serve --mode sim --mechanism hanoi_jax --batch 64
-  python -m repro.launch.serve --mode sim --mechanism volta_itps --batch 16
+  python -m repro.launch.serve --mode sim --mechanism volta_itps --batch 16 \\
+      --workers 4 --max-batch 32 --max-wait-ms 5 --archive-dir sim-archive
+  python -m repro.launch.serve --mode sim --mix hanoi_jax,hanoi,simt_stack \\
+      --batch 24
   python -m repro.launch.serve --mode sim --sm-warps 8 --sm-policy \\
       greedy_then_oldest --mechanism hanoi --bench RBFS0
 """
@@ -70,30 +75,54 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
 
 
 def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
-                      sink=None, max_workers: int | None = None) -> dict:
+                      sink=None, max_workers: int | None = None,
+                      max_batch: int = 64, max_wait_s: float = 0.005,
+                      service=None) -> dict:
     """Serve a batch of control-flow simulation requests.
 
     ``requests`` is a sequence of ``repro.engine.SimRequest`` (or Benchmark /
-    ndarray program) objects.  Returns the normalized results plus service
-    metrics; attach a TraceSink (e.g. ``JsonlSink``) for archival traces.
+    ndarray program) objects.  Thin client of
+    :class:`repro.service.SimulationService`: requests are admitted,
+    coalesced by execution signature, and dispatched (natively batched when
+    homogeneous); results come back in submission order.  The historical
+    signature is preserved — ``sink`` becomes the service archive and
+    ``max_workers`` the worker-pool size.  Pass an already-running
+    ``service`` to reuse one across calls (its own archive applies;
+    combining ``service`` with ``sink`` is rejected rather than silently
+    ignoring the sink); otherwise a private service is spun up and drained
+    for this batch.
     """
-    from repro.engine import Simulator
+    from repro.service import SimulationService
 
-    sim = Simulator(mechanism, sink=sink, max_workers=max_workers)
     t0 = time.time()
-    results = sim.run_batch(requests)
+    if service is not None:
+        if sink is not None:
+            raise ValueError(
+                "pass sink= when serve_simulations creates the service, or "
+                "construct the shared service with archive=; a sink given "
+                "alongside service= would be silently ignored")
+        results = service.run(requests, mechanism=mechanism)
+        stats = service.stats()
+    else:
+        with SimulationService(default_mechanism=mechanism, archive=sink,
+                               workers=max_workers or 2,
+                               max_batch=max_batch,
+                               max_wait_s=max_wait_s) as svc:
+            results = svc.run(requests)
+            stats = svc.stats()
     dt = time.time() - t0
     n_ok = sum(1 for r in results if r.ok)
     return {"results": results, "wall_s": dt,
             "warps_per_s": len(results) / max(dt, 1e-9),
             "ok": n_ok, "failed": len(results) - n_ok,
-            "mechanism": mechanism}
+            "mechanism": mechanism, "stats": stats}
 
 
 def _sim_main(args) -> None:
     from repro.core import MachineConfig
     from repro.core.programs import make_suite
-    from repro.engine import SimRequest, Simulator
+    from repro.engine import RotatingJsonlSink, SimRequest
+    from repro.service import SimulationService
 
     cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
     suite = make_suite(cfg, datasets=1)
@@ -101,26 +130,57 @@ def _sim_main(args) -> None:
     if bench is None:
         raise SystemExit(f"unknown benchmark {args.bench!r}; available: "
                          + ", ".join(b.name for b in suite))
-    if args.sm_warps:
-        # per-SM mode: N warps of the benchmark through one issue scheduler
-        sim = Simulator("hanoi")
-        sm = sim.run_sm(bench, cfg, n_warps=args.sm_warps,
-                        inner=args.mechanism, policy=args.sm_policy)
-        print(f"[serve:sim] SM x{sm.n_warps} warps of {args.bench} via "
-              f"{sm.inner} ({sm.policy}): status={sm.status.value} "
-              f"slots={sm.steps} cycles={sm.cycles} ipc={sm.ipc:.2f} "
-              f"util={sm.utilization:.3f}")
-        return
-    rng = np.random.default_rng(0)
-    reqs = [SimRequest(program=bench.program, cfg=cfg,
-                       init_mem=rng.integers(0, 8, size=cfg.mem_size)
-                       .astype(np.int32),
-                       record_trace=False, name=f"req{i}")
-            for i in range(args.batch)]
-    res = serve_simulations(reqs, mechanism=args.mechanism)
-    print(f"[serve:sim] {args.batch} x {args.bench} via {args.mechanism}: "
-          f"{res['ok']} ok / {res['failed']} failed in {res['wall_s']:.3f}s "
-          f"({res['warps_per_s']:.0f} warps/s)")
+    archive = (RotatingJsonlSink(args.archive_dir)
+               if args.archive_dir else None)
+    service = SimulationService(
+        default_mechanism=args.mechanism, archive=archive,
+        workers=args.workers, max_batch=args.max_batch,
+        max_wait_s=args.max_wait_ms / 1000.0)
+    try:
+        with service as svc:
+            if args.sm_warps:
+                # per-SM mode: one sharded (SM, policy) cell on the pool
+                sm = svc.submit_sm(bench, cfg, n_warps=args.sm_warps,
+                                   inner=args.mechanism,
+                                   policy=args.sm_policy).result()
+                print(f"[serve:sim] SM x{sm.n_warps} warps of {args.bench} "
+                      f"via {sm.inner} ({sm.policy}): "
+                      f"status={sm.status.value} "
+                      f"slots={sm.steps} cycles={sm.cycles} ipc={sm.ipc:.2f} "
+                      f"util={sm.utilization:.3f}")
+                return
+            rng = np.random.default_rng(0)
+            mix = (args.mix.split(",") if args.mix else [args.mechanism])
+            reqs, mechs = [], []
+            for i in range(args.batch):
+                reqs.append(SimRequest(
+                    program=bench.program, cfg=cfg,
+                    init_mem=rng.integers(0, 8, size=cfg.mem_size)
+                    .astype(np.int32),
+                    record_trace=False, name=f"req{i}"))
+                mechs.append(mix[i % len(mix)])
+            t0 = time.time()
+            tickets = [svc.submit(r, mechanism=m)
+                       for r, m in zip(reqs, mechs)]
+            svc.flush()
+            results = [t.result() for t in tickets]
+            dt = time.time() - t0
+            stats = svc.stats()
+    finally:
+        if archive is not None:     # both branches: drain the writer before
+            archive.close()         # exit or queued runs are silently lost
+    n_ok = sum(1 for r in results if r.ok)
+    mix_label = "+".join(mix)
+    print(f"[serve:sim] {args.batch} x {args.bench} via {mix_label}: "
+          f"{n_ok} ok / {len(results) - n_ok} failed in {dt:.3f}s "
+          f"({len(results) / max(dt, 1e-9):.0f} warps/s)")
+    print(f"[serve:sim] batches={stats.batches} "
+          f"native={stats.native_batches} ({stats.native_warps} warps) "
+          f"fill={stats.mean_fill:.1f} "
+          f"p50={stats.latency_p50_s * 1e3:.1f}ms "
+          f"p99={stats.latency_p99_s * 1e3:.1f}ms "
+          + (f"archived={archive.runs_written} runs in "
+             f"{len(archive.paths)} file(s)" if archive else ""))
 
 
 def main():
@@ -141,6 +201,18 @@ def main():
     ap.add_argument("--sm-policy", default="round_robin",
                     choices=["round_robin", "greedy_then_oldest"],
                     help="[sim] SM warp-scheduler policy for --sm-warps")
+    ap.add_argument("--mix", default="",
+                    help="[sim] comma-separated mechanisms to round-robin "
+                         "requests over (exercises mixed-batch coalescing)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="[sim] service worker threads")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="[sim] coalescer size-flush threshold")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="[sim] coalescer deadline-flush threshold (ms)")
+    ap.add_argument("--archive-dir", default="",
+                    help="[sim] archive traces to rotating JSONL files "
+                         "in this directory")
     args = ap.parse_args()
     if args.mode == "sim":
         _sim_main(args)

@@ -1,0 +1,50 @@
+"""repro.service — the queue-fed, coalescing, sharded simulation service.
+
+The :mod:`repro.engine` façade answers "run these requests"; this package
+answers "keep answering that at scale".  It is the ROADMAP's
+production-service layer over the mechanism registry:
+
+* **admission + coalescing** — :class:`~repro.service.coalescer
+  .BatchCoalescer` buckets incoming requests by *execution signature*
+  (:func:`~repro.service.signature.signature_of`: mechanism, resolved
+  machine config, program padding class, scheduling options, mechanism
+  meta) and flushes groups on size or deadline;
+* **planning/dispatch** — :mod:`repro.service.planner` routes
+  signature-homogeneous groups to a mechanism's native ``batch_runner``
+  (the vmap-batched JAX path) and the remainder to per-request execution;
+  it is the **same** dispatch path ``Simulator.run_batch`` uses;
+* **the service** — :class:`~repro.service.core.SimulationService`: worker
+  pool, per-(SM, policy) sharded ``run_sm`` cells, durable trace archival
+  through any :class:`~repro.engine.sinks.TraceSink` (rotation via
+  :class:`~repro.engine.sinks.RotatingJsonlSink`), and frozen
+  :class:`~repro.service.core.ServiceStats` metrics.
+
+Quick start
+-----------
+::
+
+    from repro.service import SimulationService
+    from repro.engine import RotatingJsonlSink
+
+    with SimulationService(default_mechanism="hanoi_jax",
+                           archive=RotatingJsonlSink("sim-archive"),
+                           max_batch=64, workers=4) as svc:
+        tickets = [svc.submit(prog, cfg) for prog in programs]     # async
+        mixed   = svc.run(requests, mechanism="hanoi")             # sync
+        sm      = svc.submit_sm(bench, cfg, n_warps=8,
+                                policy="greedy_then_oldest").result()
+        print(svc.stats().native_batches, svc.stats().warps_per_s)
+
+``repro.launch.serve --mode sim`` and ``serve_simulations`` are thin
+clients of this package.
+"""
+from .coalescer import Admission, BatchCoalescer, FlushedGroup
+from .core import ServiceStats, SimTicket, SimulationService
+from .planner import DispatchGroup, execute_plan, plan_dispatch, run_group
+from .signature import ExecSignature, meta_key, signature_of
+
+__all__ = [
+    "Admission", "BatchCoalescer", "DispatchGroup", "ExecSignature",
+    "FlushedGroup", "ServiceStats", "SimTicket", "SimulationService",
+    "execute_plan", "meta_key", "plan_dispatch", "run_group", "signature_of",
+]

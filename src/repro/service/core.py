@@ -1,0 +1,480 @@
+"""The queue-fed simulation service: admission, coalescing, sharded dispatch.
+
+Architecture (one process, thread-based; see ``docs/service.md``)::
+
+    submit()/submit_sm()                 service threads
+        |                                   |
+        v                                   v
+    BatchCoalescer --size flush--> dispatch queue --> worker pool
+        |                              ^                 |
+        +--deadline flush (flusher)----+                 v
+                                             planner.run_group /
+                                             Simulator.run_sm
+                                                  |
+                                                  v
+                                      tickets resolved + archive sink
+
+* **Admission**: ``submit`` coerces the request, derives its
+  :class:`~repro.service.signature.ExecSignature`, hands it to the
+  :class:`~repro.service.coalescer.BatchCoalescer`, and returns a
+  :class:`SimTicket` immediately.
+* **Coalescing**: a group flushes when it reaches ``max_batch`` (on the
+  admitting thread) or when its oldest entry has waited ``max_wait_s``
+  (the flusher thread) — see the coalescer module for the exact rules.
+* **Dispatch**: workers execute flushed groups through
+  :func:`repro.service.planner.run_group` — the same routing the
+  ``Simulator.run_batch`` façade uses — so signature-homogeneous
+  ``hanoi_jax`` groups hit the native vmap ``batch_runner``.
+* **Sharding**: per-SM jobs bypass the coalescer; each ``submit_sm`` call
+  is one (SM, policy) cell executed as a single ``Simulator.run_sm`` on
+  the worker pool, and :meth:`SimulationService.run_sm_grid` fans a grid
+  of cells out across it.
+* **Archival**: every completed warp is replayed into the ``archive``
+  sink (e.g. a :class:`~repro.engine.sinks.RotatingJsonlSink`) under a
+  lock, so any TraceSink — thread-safe or not — sees whole runs.
+* **Metrics**: :meth:`SimulationService.stats` snapshots a frozen
+  :class:`ServiceStats` (queue depth, latency percentiles, warps/s,
+  batch-fill histogram, native-batch routing counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import Counter, deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.isa import MachineConfig
+from repro.core.timing import TimingConfig
+from repro.engine.registry import get_mechanism
+from repro.engine.simulator import ProgramLike, Simulator, as_request
+from repro.engine.sinks import TraceSink, feed_result
+from repro.engine.types import SimRequest, SimResult, SmResult
+
+from .coalescer import BatchCoalescer, FlushedGroup
+from .planner import group_is_native, run_group
+from .signature import ExecSignature, signature_of
+
+__all__ = ["ServiceStats", "SimTicket", "SimulationService"]
+
+_SENTINEL = object()
+
+
+class SimTicket:
+    """Future-like handle for one admitted request (or one SM cell).
+
+    ``result(timeout)`` blocks until the service resolves it; ``done()`` /
+    ``exception()`` mirror :class:`concurrent.futures.Future`.
+    """
+
+    def __init__(self, signature: ExecSignature | None = None) -> None:
+        self.signature = signature
+        self.submitted_at = time.monotonic()
+        self._future: "Future[Any]" = Future()
+
+    def result(self, timeout: float | None = None):
+        return self._future.result(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def exception(self, timeout: float | None = None):
+        return self._future.exception(timeout)
+
+
+@dataclass(frozen=True)
+class ServiceStats:
+    """Frozen snapshot of service health and throughput.
+
+    Latency percentiles cover admission -> resolution for the most recent
+    requests (bounded window); ``warps_per_s`` is completed warp requests
+    over service uptime.  ``batch_fill`` is the coalescing histogram:
+    ``(batch_size, count)`` pairs, ascending — a service soaking enough
+    homogeneous traffic shows mass at ``max_batch``.
+    """
+
+    uptime_s: float
+    submitted: int
+    completed: int
+    failed: int
+    queue_depth: int              # admitted, not yet flushed to dispatch
+    inflight: int                 # flushed, not yet resolved
+    batches: int                  # flushed groups executed
+    native_batches: int           # groups routed to a native batch_runner
+    native_warps: int             # requests executed inside native batches
+    sm_jobs: int                  # (SM, policy) cells executed
+    flush_size: int               # flushes triggered by max_batch
+    flush_deadline: int           # flushes triggered by max_wait_s
+    flush_manual: int             # flushes triggered by flush()/stop()
+    batch_fill: tuple[tuple[int, int], ...]
+    latency_p50_s: float
+    latency_p99_s: float
+    warps_per_s: float
+
+    @property
+    def mean_fill(self) -> float:
+        """Mean coalesced batch size (1.0 = no coalescing happening)."""
+        n = sum(c for _, c in self.batch_fill)
+        if n == 0:
+            return float("nan")
+        return sum(s * c for s, c in self.batch_fill) / n
+
+
+@dataclass
+class _WarpEntry:
+    ticket: SimTicket
+    request: SimRequest
+
+
+@dataclass
+class _SmJob:
+    ticket: SimTicket
+    programs: Any
+    cfg: MachineConfig | None
+    kwargs: dict
+
+
+class SimulationService:
+    """Queue-fed, coalescing, sharded control-flow simulation service.
+
+    >>> with SimulationService(default_mechanism="hanoi_jax") as svc:
+    ...     tickets = [svc.submit(prog, cfg) for prog in programs]
+    ...     svc.flush()
+    ...     results = [t.result() for t in tickets]
+
+    Parameters
+    ----------
+    default_mechanism:
+        Mechanism for requests that do not name one (``submit(...,
+        mechanism=...)`` overrides per request — the service is
+        multi-mechanism by design; DARM-style plugins registered via
+        ``register_mechanism`` are served with no service changes).
+    max_batch / max_wait_s:
+        Coalescer flush thresholds (size / admission-latency deadline).
+    workers:
+        Worker threads executing flushed groups and SM cells.  Native JAX
+        batches release the GIL inside XLA; numpy groups are pure-Python
+        loops, so more workers mostly helps mixed/JAX traffic.
+    archive:
+        Optional :class:`~repro.engine.sinks.TraceSink` that receives every
+        completed warp (whole runs, serialized under a service lock).
+    annotate:
+        Attach ``meta["service"]`` (batch size, native routing, flush
+        cause, signature key) to every result — instrumentation for tests
+        and callers; architectural fields are never touched.
+    """
+
+    def __init__(self, *, default_mechanism: str = "hanoi_jax",
+                 max_batch: int = 64, max_wait_s: float = 0.005,
+                 workers: int = 2, archive: TraceSink | None = None,
+                 annotate: bool = True) -> None:
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._default = get_mechanism(default_mechanism).name
+        self._coalescer: BatchCoalescer[_WarpEntry] = BatchCoalescer(
+            max_batch=max_batch, max_wait_s=max_wait_s)
+        # serializes admission against shutdown: stop() flips _stopping
+        # under this lock, so no submit can slip an entry into the
+        # coalescer (or a job behind the worker sentinels) after the final
+        # flush/drain has begun — that entry's ticket would never resolve
+        self._admission_lock = threading.Lock()
+        self._n_workers = int(workers)
+        self._archive = archive
+        self._archive_lock = threading.Lock()
+        self._annotate = annotate
+        self._sim = Simulator(self._default)      # SM cells / shared façade
+        self._dispatch: "queue.Queue[Any]" = queue.Queue()
+        self._threads: list[threading.Thread] = []
+        self._flusher_wake = threading.Event()
+        self._started = False
+        self._stopping = False
+        self._lock = threading.Lock()             # stats + lifecycle
+        self._stats = {
+            "submitted": 0, "completed": 0, "failed": 0, "inflight": 0,
+            "batches": 0, "native_batches": 0, "native_warps": 0,
+            "sm_jobs": 0, "flush_size": 0, "flush_deadline": 0,
+            "flush_manual": 0,
+        }
+        self._fill: Counter = Counter()
+        self._latencies: deque = deque(maxlen=4096)
+        self._started_at = time.monotonic()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "SimulationService":
+        with self._lock:
+            if self._started:
+                return self
+            self._started = True
+            self._stopping = False
+            self._started_at = time.monotonic()
+        flusher = threading.Thread(target=self._flusher_loop, daemon=True,
+                                   name="sim-service-flusher")
+        flusher.start()
+        self._threads.append(flusher)
+        for i in range(self._n_workers):
+            w = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"sim-service-worker-{i}")
+            w.start()
+            self._threads.append(w)
+        return self
+
+    def stop(self, *, timeout: float = 30.0) -> None:
+        """Flush all pending work, drain it, and join the threads."""
+        with self._admission_lock:
+            with self._lock:
+                if not self._started:
+                    return
+                self._stopping = True
+        self.flush()
+        self._dispatch.join()                     # drain in-flight jobs
+        for _ in range(self._n_workers):
+            self._dispatch.put(_SENTINEL)
+        self._flusher_wake.set()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads.clear()
+        with self._lock:
+            self._started = False
+
+    def __enter__(self) -> "SimulationService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _ensure_started(self) -> None:
+        if not self._started:
+            self.start()
+        if self._stopping:
+            raise RuntimeError("SimulationService is stopping")
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, program: ProgramLike,
+               cfg: MachineConfig | None = None, *,
+               mechanism: str | None = None, **request_kw) -> SimTicket:
+        """Admit one warp request; returns immediately with a ticket."""
+        mech = get_mechanism(mechanism or self._default)
+        req = as_request(program, cfg, **request_kw)
+        sig = signature_of(mech, req)
+        ticket = SimTicket(sig)
+        with self._admission_lock:
+            self._ensure_started()
+            with self._lock:
+                self._stats["submitted"] += 1
+            full, created = self._coalescer.add(sig, _WarpEntry(ticket, req))
+            if full is not None:
+                self._enqueue_group(full)
+            elif created:
+                self._flusher_wake.set()          # new earliest deadline
+        return ticket
+
+    def submit_many(self, programs: Sequence[ProgramLike],
+                    cfg: MachineConfig | None = None, *,
+                    mechanism: str | None = None,
+                    **request_kw) -> list[SimTicket]:
+        return [self.submit(p, cfg, mechanism=mechanism, **request_kw)
+                for p in programs]
+
+    def submit_sm(self, programs: "ProgramLike | Sequence[ProgramLike]",
+                  cfg: MachineConfig | None = None, *,
+                  n_warps: int | None = None, inner: str | None = None,
+                  policy: str = "round_robin",
+                  timing_cfg: TimingConfig = TimingConfig(),
+                  **request_kw) -> SimTicket:
+        """Admit one (SM, policy) cell — executed as a single sharded
+        ``Simulator.run_sm`` call on the worker pool, bypassing the
+        coalescer (an SM cell is already a batch of warps)."""
+        ticket = SimTicket()
+        job = _SmJob(ticket=ticket, programs=programs, cfg=cfg,
+                     kwargs=dict(n_warps=n_warps, inner=inner, policy=policy,
+                                 timing_cfg=timing_cfg, **request_kw))
+        with self._admission_lock:
+            self._ensure_started()
+            with self._lock:
+                self._stats["submitted"] += 1
+                self._stats["inflight"] += 1
+            self._dispatch.put(job)
+        return ticket
+
+    # -- synchronous conveniences -------------------------------------------
+
+    def run(self, requests: Sequence[ProgramLike],
+            cfg: MachineConfig | None = None, *,
+            mechanism: str | None = None, timeout: float | None = None,
+            **request_kw) -> list[SimResult]:
+        """Submit a batch, flush, and wait — results in submission order.
+
+        Mixed batches are fine: requests are coalesced by signature and may
+        execute out of order across groups, but the returned list always
+        matches the order of ``requests``.
+        """
+        tickets = self.submit_many(requests, cfg, mechanism=mechanism,
+                                   **request_kw)
+        self.flush()
+        return [t.result(timeout) for t in tickets]
+
+    def run_sm_grid(self, cells: Sequence[Mapping[str, Any]], *,
+                    timeout: float | None = None) -> list[SmResult]:
+        """Fan a grid of (SM, policy) cells out over the worker pool.
+
+        Each cell is a mapping of :meth:`submit_sm` arguments, e.g.
+        ``{"programs": bench, "cfg": cfg, "n_warps": 8, "policy":
+        "greedy_then_oldest"}`` — one ``run_sm`` call per cell, the
+        ROADMAP's sharding unit.
+        """
+        tickets = [self.submit_sm(**dict(cell)) for cell in cells]
+        return [t.result(timeout) for t in tickets]
+
+    def flush(self) -> None:
+        """Force-flush every pending coalescer group to the dispatcher."""
+        for group in self._coalescer.flush_all():
+            self._enqueue_group(group)
+
+    # -- metrics ------------------------------------------------------------
+
+    def stats(self) -> ServiceStats:
+        now = time.monotonic()
+        with self._lock:
+            s = dict(self._stats)
+            lat = sorted(self._latencies)
+            fill = tuple(sorted(self._fill.items()))
+            uptime = max(1e-9, now - self._started_at)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        return ServiceStats(
+            uptime_s=uptime,
+            submitted=s["submitted"], completed=s["completed"],
+            failed=s["failed"],
+            queue_depth=self._coalescer.depth(),
+            inflight=s["inflight"],
+            batches=s["batches"], native_batches=s["native_batches"],
+            native_warps=s["native_warps"], sm_jobs=s["sm_jobs"],
+            flush_size=s["flush_size"], flush_deadline=s["flush_deadline"],
+            flush_manual=s["flush_manual"],
+            batch_fill=fill,
+            latency_p50_s=pct(0.50), latency_p99_s=pct(0.99),
+            warps_per_s=s["completed"] / uptime)
+
+    # -- internals: flusher -------------------------------------------------
+
+    def _enqueue_group(self, group: FlushedGroup[_WarpEntry]) -> None:
+        with self._lock:
+            self._stats[f"flush_{group.cause}"] += 1
+            self._stats["inflight"] += group.size
+        self._dispatch.put(group)
+
+    def _flusher_loop(self) -> None:
+        while True:
+            deadline = self._coalescer.next_deadline()
+            if deadline is None:
+                self._flusher_wake.wait()
+            else:
+                self._flusher_wake.wait(
+                    timeout=max(0.0, deadline - time.monotonic()))
+            self._flusher_wake.clear()
+            # the admission lock makes pop->enqueue atomic w.r.t. stop():
+            # without it, a group popped by due() here could be enqueued
+            # *behind* the worker sentinels (stop's flush_all sees an empty
+            # coalescer, join() returns, sentinels go in, workers exit) and
+            # its tickets would never resolve
+            with self._admission_lock:
+                with self._lock:
+                    if self._stopping:
+                        return
+                for group in self._coalescer.due():
+                    self._enqueue_group(group)
+
+    # -- internals: workers -------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._dispatch.get()
+            try:
+                if job is _SENTINEL:
+                    return
+                if isinstance(job, _SmJob):
+                    self._execute_sm(job)
+                else:
+                    self._execute_group(job)
+            finally:
+                self._dispatch.task_done()
+
+    def _execute_group(self, group: FlushedGroup[_WarpEntry]) -> None:
+        mech = get_mechanism(group.signature.mechanism)
+        native = group_is_native(mech, group.signature)
+        reqs = [e.payload.request for e in group.entries]
+        try:
+            results = run_group(mech, reqs, native=native)
+        except Exception as exc:                  # resolve the whole group
+            with self._lock:
+                self._stats["failed"] += group.size
+                self._stats["inflight"] -= group.size
+            for e in group.entries:
+                e.payload.ticket._future.set_exception(exc)
+            return
+        now = time.monotonic()
+        if self._annotate:
+            svc_meta = {"batch_size": group.size, "native": native,
+                        "flush": group.cause, "signature":
+                        group.signature.key}
+            results = [dataclasses.replace(
+                r, meta={**r.meta, "service": svc_meta}) for r in results]
+        for entry, req, res in zip(group.entries, reqs, results):
+            self._archive_result(res, mech.name, req)
+            entry.payload.ticket._future.set_result(res)
+        with self._lock:
+            self._stats["completed"] += group.size
+            self._stats["inflight"] -= group.size
+            self._stats["batches"] += 1
+            if native:
+                self._stats["native_batches"] += 1
+                self._stats["native_warps"] += group.size
+            self._fill[group.size] += 1
+            for e in group.entries:
+                self._latencies.append(now - e.submitted_at)
+
+    def _execute_sm(self, job: _SmJob) -> None:
+        try:
+            sm = self._sim.run_sm(job.programs, job.cfg, **job.kwargs)
+        except Exception as exc:
+            with self._lock:
+                self._stats["failed"] += 1
+                self._stats["inflight"] -= 1
+            job.ticket._future.set_exception(exc)
+            return
+        now = time.monotonic()
+        for w, warp_res in enumerate(sm.warps):
+            self._archive_result(
+                warp_res, sm.inner,
+                meta={"mechanism": sm.inner, "program": f"sm/w{w}",
+                      "sm_policy": sm.policy, "sm_warps": sm.n_warps})
+        job.ticket._future.set_result(sm)
+        with self._lock:
+            self._stats["completed"] += 1
+            self._stats["inflight"] -= 1
+            self._stats["sm_jobs"] += 1
+            self._latencies.append(now - job.ticket.submitted_at)
+
+    def _archive_result(self, result: SimResult, mechanism: str,
+                        req: SimRequest | None = None,
+                        meta: Mapping[str, Any] | None = None) -> None:
+        if self._archive is None:
+            return
+        if meta is None:
+            assert req is not None
+            meta = {"mechanism": mechanism, "program": req.name,
+                    "n_threads": req.resolved_cfg().n_threads,
+                    "program_len": int(np.asarray(req.program).shape[0])}
+        with self._archive_lock:
+            feed_result(self._archive, result, meta)

@@ -18,14 +18,28 @@ import numpy as np
 import pytest
 
 from repro.core import MachineConfig, run_reference, simd_utilization
-from repro.core.interp import run_hanoi, run_simt_stack
-from repro.core.dualpath import run_dual_path
 from repro.core.programs import (fig6_no_break_program, fig6_program,
                                  make_suite, spinlock_program,
                                  warpsync_program)
+from repro.engine import Simulator
 from tests.progen import make_program
 
 CFG = MachineConfig(n_threads=32, mem_size=256, max_steps=60_000)
+# all three mechanisms run through the canonical engine façade (the
+# interp/dualpath run_* entry points are deprecated shims)
+SIM = Simulator("hanoi")
+
+
+def run_hanoi(prog, cfg, **kw):
+    return SIM.run(prog, cfg, **kw)
+
+
+def run_simt_stack(prog, cfg, **kw):
+    return SIM.run(prog, cfg, mechanism="simt_stack", **kw)
+
+
+def run_dual_path(prog, cfg, **kw):
+    return SIM.run(prog, cfg, mechanism="dualpath", **kw)
 
 
 def test_dual_path_matches_reference_on_structured_programs():

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core import MachineConfig
-from repro.core.interp import run_hanoi
 from repro.core.hanoi import (run_hanoi_jax, run_warps_jax, state_deadlocked,
                               state_trace)
+from repro.engine import Simulator
 from repro.core.programs import (fig5_program, fig6_program, make_suite,
                                  spinlock_program, warpsync_program)
 # compat shim: without hypothesis only the @given tests skip, the
@@ -19,10 +19,20 @@ from tests.progen import BASE_CFG, MEM, W, make_program
 
 CFG = MachineConfig(n_threads=4, max_steps=2048)
 PAD = 128
+SIM = Simulator("hanoi")
+
+
+def run_ref(prog, cfg, *, init_mem=None, init_regs=None, skips=()):
+    """The numpy Hanoi reference through the canonical ``repro.engine`` API
+    (``interp.run_hanoi`` is a deprecated shim); a non-empty oracle skip set
+    selects the ``turing_oracle`` mechanism, which is Hanoi + skips."""
+    mech = "turing_oracle" if skips else "hanoi"
+    return SIM.run(prog, cfg, mechanism=mech, init_mem=init_mem,
+                   init_regs=init_regs, bsync_skip_pcs=tuple(skips))
 
 
 def assert_equiv(prog, cfg, *, init_mem=None, skips=()):
-    ref = run_hanoi(prog, cfg, init_mem=init_mem, bsync_skip_pcs=skips)
+    ref = run_ref(prog, cfg, init_mem=init_mem, skips=skips)
     st_ = run_hanoi_jax(prog, cfg, init_mem=init_mem, bsync_skip_pcs=skips,
                         pad_to=PAD)
     assert state_deadlocked(st_, cfg) == ref.deadlocked
@@ -30,7 +40,7 @@ def assert_equiv(prog, cfg, *, init_mem=None, skips=()):
     np.testing.assert_array_equal(np.asarray(st_.preds), ref.preds)
     np.testing.assert_array_equal(np.asarray(st_.mem), ref.mem)
     assert int(st_.finished) == ref.finished
-    assert state_trace(st_) == ref.trace
+    assert tuple(state_trace(st_)) == ref.trace
 
 
 @pytest.mark.parametrize("mk", [fig5_program, fig6_program,
@@ -54,12 +64,12 @@ def test_jax_matches_numpy_on_random_programs(seed, n_bx):
     if prog.shape[0] > 256:
         return
     cfg = cfg._replace(max_steps=4096)
-    ref = run_hanoi(prog, cfg, init_mem=mem)
+    ref = run_ref(prog, cfg, init_mem=mem)
     st_ = run_hanoi_jax(prog, cfg, init_mem=mem, pad_to=256)
     np.testing.assert_array_equal(np.asarray(st_.regs), ref.regs)
     np.testing.assert_array_equal(np.asarray(st_.mem), ref.mem)
     assert int(st_.finished) == ref.finished
-    assert state_trace(st_) == ref.trace
+    assert tuple(state_trace(st_)) == ref.trace
 
 
 def test_vmapped_warps_match_sequential():
@@ -74,7 +84,7 @@ def test_vmapped_warps_match_sequential():
     mems = rng.integers(0, 8, size=(n_warps, cfg.mem_size)).astype(np.int32)
     batched = run_warps_jax(prog, cfg, regs, mems)
     for i in range(n_warps):
-        ref = run_hanoi(prog, cfg, init_regs=regs[i], init_mem=mems[i])
+        ref = run_ref(prog, cfg, init_regs=regs[i], init_mem=mems[i])
         np.testing.assert_array_equal(np.asarray(batched.regs[i]), ref.regs)
         np.testing.assert_array_equal(np.asarray(batched.mem[i]), ref.mem)
         assert int(batched.finished[i]) == ref.finished
@@ -96,9 +106,9 @@ def test_fuel_exhaustion_equivalence(seed, fuel):
     if prog.shape[0] > 256:
         return
     cfg = cfg._replace(max_steps=fuel)
-    ref = run_hanoi(prog, cfg, init_mem=mem)
+    ref = run_ref(prog, cfg, init_mem=mem)
     st_ = run_hanoi_jax(prog, cfg, init_mem=mem, pad_to=256)
-    assert state_trace(st_) == ref.trace
+    assert tuple(state_trace(st_)) == ref.trace
     assert int(st_.steps) == ref.steps
     assert int(st_.fuel) == ref.fuel_left
     assert int(st_.finished) == ref.finished
@@ -123,7 +133,7 @@ def test_oracle_skip_on_jax_engine():
     bsyncs = [pc for pc in range(prog.shape[0]) if prog[pc, 0] == Op.BSYNC]
     if bsyncs:
         skips = (bsyncs[-1],)
-    ref = run_hanoi(prog, cfg, init_mem=mem, bsync_skip_pcs=skips)
+    ref = run_ref(prog, cfg, init_mem=mem, skips=skips)
     st_ = run_hanoi_jax(prog, cfg, init_mem=mem, bsync_skip_pcs=skips)
     np.testing.assert_array_equal(np.asarray(st_.regs), ref.regs)
-    assert state_trace(st_) == ref.trace
+    assert tuple(state_trace(st_)) == ref.trace

@@ -1,16 +1,18 @@
 """Step-by-step validation of the paper's walkthrough figures on the
-numpy reference interpreter (repro.core.interp)."""
+numpy reference interpreter, driven through the canonical ``repro.engine``
+API (the ``interp.run_*`` entry points are deprecated shims)."""
 import numpy as np
 import pytest
 
 from repro.core import (MachineConfig, Op, assemble, immediate_postdominators,
                         run_reference)
-from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.programs import (diamond_program, fig5_program,
                                  fig6_no_break_program, fig6_program,
                                  warpsync_program)
+from repro.engine import Simulator
 
 CFG4 = MachineConfig(n_threads=4, max_steps=512)
+SIM = Simulator("hanoi")
 
 
 def masks_of(trace, pc):
@@ -22,7 +24,7 @@ def masks_of(trace, pc):
 # ---------------------------------------------------------------------------
 
 def test_diamond_hanoi():
-    r = run_hanoi(diamond_program(), CFG4)
+    r = SIM.run(diamond_program(), CFG4)
     assert not r.deadlocked and r.error is None
     assert r.finished == 0b1111
     # threads 0,1 took the 'taken' path (lane < 2)
@@ -36,8 +38,8 @@ def test_diamond_hanoi():
 
 def test_diamond_simt_stack_matches():
     prog = diamond_program()
-    h = run_hanoi(prog, CFG4)
-    s = run_simt_stack(prog, CFG4)
+    h = SIM.run(prog, CFG4)
+    s = SIM.run(prog, CFG4, mechanism="simt_stack")
     assert not s.deadlocked
     np.testing.assert_array_equal(h.regs, s.regs)
     np.testing.assert_array_equal(h.mem, s.mem)
@@ -45,7 +47,7 @@ def test_diamond_simt_stack_matches():
 
 def test_diamond_matches_reference():
     prog = diamond_program()
-    h = run_hanoi(prog, CFG4)
+    h = SIM.run(prog, CFG4)
     ref = run_reference(prog, CFG4)
     np.testing.assert_array_equal(h.regs, ref.regs)
 
@@ -55,7 +57,7 @@ def test_diamond_matches_reference():
 # ---------------------------------------------------------------------------
 
 def test_fig5_results():
-    r = run_hanoi(fig5_program(), CFG4)
+    r = SIM.run(fig5_program(), CFG4)
     assert not r.deadlocked and r.error is None
     assert r.finished == 0b1111
     np.testing.assert_array_equal(r.regs[:, 2], [100, 100, 20, 30])
@@ -68,7 +70,7 @@ def test_fig5_results():
 
 def test_fig5_reconvergence_masks():
     prog = fig5_program()
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     # find the 'MOV R3, 5' (E tail) and the EXIT: E tail must run with mask
     # 0b1100 (threads 2,3 reunited), EXIT with the full mask.
     mov5_pc = next(pc for pc in range(prog.shape[0])
@@ -80,7 +82,7 @@ def test_fig5_reconvergence_masks():
 
 def test_fig5_matches_reference():
     prog = fig5_program()
-    h = run_hanoi(prog, CFG4)
+    h = SIM.run(prog, CFG4)
     ref = run_reference(prog, CFG4)
     np.testing.assert_array_equal(h.regs[:, 2:4], ref.regs[:, 2:4])
 
@@ -91,7 +93,7 @@ def test_fig5_matches_reference():
 
 def test_fig6_early_reconvergence():
     prog = fig6_program()
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked and r.error is None
     assert r.finished == 0b1111
     np.testing.assert_array_equal(r.regs[:, 2], [0, 7, 7, 7])    # B body
@@ -110,7 +112,7 @@ def test_fig6_early_reconvergence():
 def test_fig6_without_break_deadlocks():
     """SS VI-B: remove the BREAK and the BSYNC at B waits for thread 0
     forever."""
-    r = run_hanoi(fig6_no_break_program(), CFG4)
+    r = SIM.run(fig6_no_break_program(), CFG4)
     assert r.deadlocked
 
 
@@ -120,7 +122,7 @@ def test_fig6_without_break_deadlocks():
 
 def test_warpsync_reunites():
     prog = warpsync_program(4)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked and r.error is None
     np.testing.assert_array_equal(r.regs[:, 2], [1, 1, 2, 2])
     np.testing.assert_array_equal(r.regs[:, 3], [9, 9, 9, 9])
@@ -144,7 +146,7 @@ w:
     MOV R3, 9
     EXIT
 """)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked
     np.testing.assert_array_equal(r.regs[:, 3], [9, 9, 9, 9])
 
@@ -169,7 +171,7 @@ tgt:
 end:
     EXIT
 """)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     np.testing.assert_array_equal(r.regs[:, 2], [6, 5, 5, 5])
     np.testing.assert_array_equal(r.regs[:, 3], [0, 15, 15, 15])
     np.testing.assert_array_equal(r.regs[:, 4], [1, 2, 2, 1])
@@ -184,7 +186,7 @@ def test_predicated_exit():
     MOV R2, 7               ; lanes 2,3 continue
     EXIT
 """)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked
     assert r.finished == 0b1111
     np.testing.assert_array_equal(r.regs[:, 2], [0, 0, 7, 7])
@@ -207,7 +209,7 @@ sync:
     MOV R3, 4               ; must still run for lanes 0,1
     EXIT
 """)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked
     assert r.finished == 0b1111
     np.testing.assert_array_equal(r.regs[:, 3], [4, 4, 0, 0])
@@ -240,7 +242,7 @@ fn:
     MOV R3, 42
     RET R7
 """)
-    r = run_hanoi(prog, CFG4)
+    r = SIM.run(prog, CFG4)
     assert not r.deadlocked
     np.testing.assert_array_equal(r.regs[:, 2], [1, 1, 1, 1])
     np.testing.assert_array_equal(r.regs[:, 3], [42, 42, 42, 42])

@@ -22,13 +22,17 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compile_structured, run_reference
-from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.isa import Op
 from repro.core.structured import If, Raw, Seq, While
+from repro.engine import Simulator
 # program generator shared with test_hanoi_jax (and importable without
 # hypothesis); names re-exported here for backwards compatibility
 from tests.progen import (BASE_CFG, CHECK_REGS, MEM, W, _node,  # noqa: F401
                           make_program)
+
+# every mechanism under test runs through the canonical engine façade (the
+# interp.run_* entry points are deprecated shims)
+SIM = Simulator("hanoi")
 
 
 @settings(max_examples=120, deadline=None)
@@ -38,7 +42,7 @@ def test_hanoi_matches_scalar_reference(seed, n_bx):
     if built is None:
         return
     prog, mem = built
-    h = run_hanoi(prog, cfg, init_mem=mem)
+    h = SIM.run(prog, cfg, init_mem=mem)
     assert not h.deadlocked, "structured programs must not deadlock"
     assert h.error is None
     ref = run_reference(prog, cfg, init_mem=mem)
@@ -54,7 +58,7 @@ def test_simt_stack_matches_reference(seed):
     if built is None:
         return
     prog, mem = built
-    s = run_simt_stack(prog, cfg, init_mem=mem)
+    s = SIM.run(prog, cfg, init_mem=mem, mechanism="simt_stack")
     assert not s.deadlocked
     ref = run_reference(prog, cfg, init_mem=mem)
     np.testing.assert_array_equal(s.regs[:, CHECK_REGS], ref.regs[:, CHECK_REGS])
@@ -86,8 +90,8 @@ def test_oracle_skip_heuristic_is_correctness_preserving(seed):
     mem = rng.integers(0, 8, size=MEM).astype(np.int32)
     last_bsync = max(pc for pc in range(prog.shape[0])
                      if prog[pc, 0] == Op.BSYNC)
-    o = run_hanoi(prog, cfg, init_mem=mem,
-                  bsync_skip_pcs=frozenset([last_bsync]))
+    o = SIM.run(prog, cfg, init_mem=mem, mechanism="turing_oracle",
+                bsync_skip_pcs=(last_bsync,))
     assert not o.deadlocked
     ref = run_reference(prog, cfg, init_mem=mem)
     np.testing.assert_array_equal(o.regs[:, CHECK_REGS], ref.regs[:, CHECK_REGS])
@@ -101,7 +105,7 @@ def test_trace_invariants(seed):
     if built is None:
         return
     prog, mem = built
-    h = run_hanoi(prog, cfg, init_mem=mem)
+    h = SIM.run(prog, cfg, init_mem=mem)
     L = prog.shape[0]
     for pc, m in h.trace:
         assert 0 <= pc < L
@@ -126,8 +130,8 @@ def test_path_priority_is_correctness_neutral(seed):
     if built is None:
         return
     prog, mem = built
-    a = run_hanoi(prog, cfg, init_mem=mem, majority_first=True)
-    b = run_hanoi(prog, cfg, init_mem=mem, majority_first=False)
+    a = SIM.run(prog, cfg, init_mem=mem, majority_first=True)
+    b = SIM.run(prog, cfg, init_mem=mem, majority_first=False)
     assert not a.deadlocked and not b.deadlocked
     np.testing.assert_array_equal(a.regs[:, CHECK_REGS], b.regs[:, CHECK_REGS])
     np.testing.assert_array_equal(a.mem, b.mem)

@@ -1,18 +1,22 @@
 """SS III / SS VI-C: SIMT-induced deadlock on pre-Volta, fixed by YIELD +
 late BSYNC on Hanoi.  Mutual exclusion is checked observably: the critical
-section does a non-atomic read-modify-write on a shared counter."""
-import numpy as np
+section does a non-atomic read-modify-write on a shared counter.
+
+Runs through the canonical ``repro.engine`` API (the ``interp.run_*``
+entry points are deprecated shims)."""
 import pytest
 
 from repro.core import MachineConfig
-from repro.core.interp import run_hanoi, run_simt_stack
 from repro.core.programs import spinlock_no_yield_program, spinlock_program
+from repro.engine import Simulator
+
+SIM = Simulator("hanoi")
 
 
 @pytest.mark.parametrize("w", [2, 4, 8, 16, 32])
 def test_hanoi_spinlock_completes_and_excludes(w):
     cfg = MachineConfig(n_threads=w, max_steps=40_000)
-    r = run_hanoi(spinlock_program(), cfg)
+    r = SIM.run(spinlock_program(), cfg)
     assert not r.deadlocked, "Hanoi must complete the spinlock (SS VI-C)"
     assert r.finished == cfg.full_mask
     assert r.mem[0] == 0, "lock released at the end"
@@ -23,7 +27,7 @@ def test_yield_removed_deadlocks_on_hanoi():
     """The paper's SS V-G ablation: removing YIELD from the binary makes the
     program hang on real Turing hardware — and on Hanoi."""
     cfg = MachineConfig(n_threads=4, max_steps=20_000)
-    r = run_hanoi(spinlock_no_yield_program(), cfg)
+    r = SIM.run(spinlock_no_yield_program(), cfg)
     assert r.deadlocked
     assert r.mem[1] < 4     # not every thread made it through the CS
 
@@ -32,7 +36,7 @@ def test_simt_stack_spinlock_deadlocks():
     """SS III: the pre-Volta mechanism deadlocks on the Fig 3 spinlock no
     matter the path priority."""
     cfg = MachineConfig(n_threads=4, max_steps=20_000)
-    r = run_simt_stack(spinlock_program(), cfg)
+    r = SIM.run(spinlock_program(), cfg, mechanism="simt_stack")
     assert r.deadlocked
 
 
@@ -40,7 +44,7 @@ def test_spinlock_trace_interleaves_paths():
     """Post-Volta behavior (Fig 4): the trace must interleave the loop path
     and the critical-section path — impossible pre-Volta (constraint 1)."""
     cfg = MachineConfig(n_threads=4, max_steps=40_000)
-    r = run_hanoi(spinlock_program(), cfg)
+    r = SIM.run(spinlock_program(), cfg)
     # find a loop pc and a critical-section pc and check the trace switches
     # from loop -> CS -> loop at least once
     prog = spinlock_program()
