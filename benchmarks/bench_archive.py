@@ -1,0 +1,145 @@
+"""Archive-path benchmarks: bit-parallel Levenshtein + write/read/replay.
+
+Two sections:
+
+* **levenshtein** — the Myers bit-parallel edit distance
+  (``repro.core.trace.levenshtein``) against the classic DP
+  (``levenshtein_dp``) on token streams shaped like real control-flow
+  traces (long runs of matching prefix with scattered divergence, plus a
+  worst-case random pair).  The acceptance gate (ISSUE 4) asserts a >=5x
+  speedup at trace length >= 2k — this is what makes offline Fig 9 diffing
+  tractable over millions of archived warps.
+* **archive** — end-to-end throughput of the durable path: write runs
+  through ``RotatingJsonlSink``, read them back with ``ArchiveReader``,
+  self-replay with ``Replayer`` (asserting 0.0 discrepancy), reporting
+  runs/s per stage.
+
+Run:   PYTHONPATH=src python benchmarks/bench_archive.py
+CI:    PYTHONPATH=src python benchmarks/bench_archive.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from repro.archive import ArchiveReader, Replayer
+from repro.core import MachineConfig
+from repro.core.programs import make_suite
+from repro.core.trace import levenshtein, levenshtein_dp
+from repro.engine import (RotatingJsonlSink, Simulator, as_request,
+                          feed_result, run_meta)
+
+GATE_LEN = 2048          # acceptance: >=5x speedup at traces >= 2k tokens
+GATE_SPEEDUP = 5.0
+
+
+def _trace_like_pair(rng: np.random.Generator, n: int,
+                     mutate: float) -> tuple[np.ndarray, np.ndarray]:
+    """Two token streams with trace statistics: mostly-shared content with
+    ``mutate`` fraction of substitutions/indels (a mechanism pair diverges
+    locally, not uniformly)."""
+    base = rng.integers(0, 200, size=n).astype(np.int64)
+    other = base.copy()
+    n_mut = max(1, int(mutate * n))
+    idx = rng.choice(n, size=n_mut, replace=False)
+    other[idx] = rng.integers(200, 400, size=n_mut)
+    drop = rng.choice(n, size=n_mut // 2, replace=False)
+    other = np.delete(other, drop)
+    return base, other
+
+
+def bench_levenshtein(lengths: tuple[int, ...], *, repeats: int = 3) -> None:
+    rng = np.random.default_rng(0)
+    print("== levenshtein: Myers bit-parallel vs DP ==")
+    print(f"{'len':>6} {'kind':>8} {'dist':>7} {'myers_s':>9} "
+          f"{'dp_s':>9} {'speedup':>8}")
+    gate_ok = []
+    for n in lengths:
+        for kind, (a, b) in (
+                ("trace", _trace_like_pair(rng, n, mutate=0.05)),
+                ("random", (rng.integers(0, 1000, n).astype(np.int64),
+                            rng.integers(0, 1000, n).astype(np.int64)))):
+            t_my = _timed(levenshtein, a, b, repeats=repeats)
+            t_dp = _timed(levenshtein_dp, a, b, repeats=1)
+            d_my, d_dp = levenshtein(a, b), levenshtein_dp(a, b)
+            assert d_my == d_dp, (n, kind, d_my, d_dp)
+            speedup = t_dp / max(t_my, 1e-9)
+            print(f"{n:>6} {kind:>8} {d_my:>7} {t_my:>9.4f} "
+                  f"{t_dp:>9.4f} {speedup:>7.1f}x")
+            if n >= GATE_LEN:
+                gate_ok.append(speedup)
+    assert gate_ok and min(gate_ok) >= GATE_SPEEDUP, (
+        f"acceptance gate: Myers must be >={GATE_SPEEDUP}x the DP at "
+        f"length >={GATE_LEN}; measured {gate_ok}")
+    print(f"gate OK: >= {GATE_SPEEDUP}x at length >= {GATE_LEN} "
+          f"(worst {min(gate_ok):.1f}x)")
+
+
+def _timed(fn, *args, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_archive(n_runs: int) -> None:
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+    suite = make_suite(cfg, datasets=1)
+    sim = Simulator("hanoi")
+    # pre-run once per program; archival replays results into the sink, so
+    # the write benchmark measures the sink, not the interpreter
+    results = [(b, sim.run(b, cfg)) for b in suite]
+    print(f"\n== archive: write -> read -> self-replay "
+          f"({n_runs} runs over {len(results)} programs) ==")
+    with tempfile.TemporaryDirectory() as tmp:
+        sink = RotatingJsonlSink(tmp, max_bytes=1 << 20)
+        t0 = time.perf_counter()
+        for i in range(n_runs):
+            bench, res = results[i % len(results)]
+            feed_result(sink, res, run_meta("hanoi", as_request(bench, cfg)))
+        sink.flush()
+        t_write = time.perf_counter() - t0
+        sink.close()
+
+        reader = ArchiveReader(tmp)
+        t0 = time.perf_counter()
+        runs = reader.runs()
+        t_read = time.perf_counter() - t0
+        assert len(runs) == n_runs and reader.report.clean
+
+        t0 = time.perf_counter()
+        report = Replayer(simulator=sim).replay(runs)
+        t_replay = time.perf_counter() - t0
+        assert report.replayed == n_runs
+        assert report.mean_discrepancy() == 0.0
+
+        print(f"{'stage':>8} {'runs/s':>10} {'wall_s':>9}")
+        for stage, dt in (("write", t_write), ("read", t_read),
+                          ("replay", t_replay)):
+            print(f"{stage:>8} {n_runs / max(dt, 1e-9):>10.0f} {dt:>9.3f}")
+        print(f"archive files: {len(sink.paths)}, "
+              f"{sink.bytes_written / 1e6:.2f} MB, "
+              f"self-replay discrepancy: "
+              f"{report.mean_discrepancy():.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (still enforces the >=5x gate)")
+    args = ap.parse_args()
+    if args.smoke:
+        bench_levenshtein((512, GATE_LEN), repeats=1)
+        bench_archive(n_runs=60)
+    else:
+        bench_levenshtein((512, GATE_LEN, 4096))
+        bench_archive(n_runs=400)
+
+
+if __name__ == "__main__":
+    main()

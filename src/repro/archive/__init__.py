@@ -1,0 +1,39 @@
+"""repro.archive — offline reading and replay of durable trace archives.
+
+The simulation service writes every completed warp to rotated JSONL files
+through :class:`~repro.engine.sinks.RotatingJsonlSink`; this package is the
+matching read path, closing the write-path/read-path asymmetry:
+
+* :class:`ArchiveReader` — iterates whole runs across the rotated
+  ``{prefix}-NNNNN.jsonl`` files, reassembling ``begin``/``issue``/``end``
+  events into ``(pc, mask)`` traces plus request meta, tolerating (and
+  accounting for, via :class:`ReadReport`) a truncated tail from a crashed
+  or degraded writer;
+* :class:`Replayer` — reconstructs each run's
+  :class:`~repro.engine.types.SimRequest`, re-executes it under any
+  registered mechanism (batched through ``Simulator.run_batch`` or a
+  running ``SimulationService``), and emits a :class:`ReplayReport` of
+  per-run Levenshtein discrepancies with aggregate / per-mechanism /
+  per-program breakdowns — the paper's Fig 9 at archive scale.
+
+Quick start::
+
+    from repro.archive import ArchiveReader, Replayer
+
+    report = Replayer().replay("sim-archive")        # self-replay: 0.0
+    assert report.mean_discrepancy() == 0.0
+
+    fig9 = Replayer("hanoi").replay("oracle-archive")  # offline Fig 9
+    print(fig9.render())
+
+CLI: ``python -m repro.archive DIR [--mechanism NAME] [--expect-zero]`` or
+``python -m repro.launch.serve --mode replay --archive-dir DIR``.
+"""
+from .reader import ArchivedRun, ArchiveReader, ReadReport, request_from_meta
+from .replay import (Aggregate, Replayer, ReplayReport, ReplayRow,
+                     nearest_rank)
+
+__all__ = [
+    "Aggregate", "ArchiveReader", "ArchivedRun", "ReadReport", "Replayer",
+    "ReplayReport", "ReplayRow", "nearest_rank", "request_from_meta",
+]

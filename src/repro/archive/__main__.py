@@ -1,0 +1,62 @@
+"""CLI: replay a RotatingJsonlSink archive and report Fig 9 discrepancy.
+
+Usage::
+
+    python -m repro.archive DIR                       # self-replay integrity
+    python -m repro.archive DIR --mechanism hanoi     # offline Fig 9 vs DIR
+    python -m repro.archive DIR --expect-zero         # CI gate: bit-equal
+
+``--expect-zero`` exits non-zero unless at least one run replayed and every
+replayed run came back with exactly 0.0 discrepancy — the self-replay
+integrity gate CI runs against a freshly written archive.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .reader import ArchiveReader
+from .replay import Replayer
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.archive",
+        description="Replay a rotated JSONL trace archive and report "
+                    "control-flow discrepancy (the paper's Fig 9, offline).")
+    ap.add_argument("directory", help="archive directory "
+                                      "(RotatingJsonlSink output)")
+    ap.add_argument("--prefix", default="traces",
+                    help="archive file prefix (default: traces)")
+    ap.add_argument("--mechanism", default="",
+                    help="replay mechanism override (default: replay each "
+                         "run under its archived mechanism)")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="replay at most N runs (0 = all)")
+    ap.add_argument("--expect-zero", action="store_true",
+                    help="exit 1 unless >=1 run replayed and every run has "
+                         "exactly 0.0 discrepancy (self-replay gate)")
+    args = ap.parse_args(argv)
+
+    reader = ArchiveReader(args.directory, prefix=args.prefix)
+    replayer = Replayer(args.mechanism or None)
+    report = replayer.replay(reader, limit=args.limit or None)
+    print(report.render())
+
+    if args.expect_zero:
+        bad = [r for r in report.rows if r.discrepancy != 0.0]
+        if not report.rows:
+            print("[archive] expect-zero FAILED: no runs replayed",
+                  file=sys.stderr)
+            return 1
+        if bad:
+            worst = max(bad, key=lambda r: r.discrepancy)
+            print(f"[archive] expect-zero FAILED: {len(bad)} run(s) with "
+                  f"non-zero discrepancy (worst: {worst.program} "
+                  f"{worst.discrepancy_pct:.2f}%)", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,272 @@
+"""Replaying archived runs and diffing them — the paper's Fig 9 offline.
+
+The live evaluation (`Simulator.compare`) runs two mechanisms side by side
+and reports the normalized Levenshtein discrepancy between their
+control-flow traces.  The :class:`Replayer` produces the *same numbers from
+the durable archive*: each archived run's request is reconstructed
+(:func:`~repro.archive.reader.request_from_meta`), re-executed under a
+registered mechanism, and the replayed trace is diffed against the archived
+one with the archived trace in the hardware-reference role — so
+
+* ``Replayer()`` (no override) is the **integrity check**: every mechanism
+  is deterministic, so self-replay must be bit-equal (0.0 discrepancy);
+* ``Replayer("some_mechanism")`` is **Fig 9 at archive scale**: diff a fleet
+  of archived reference traces against any mechanism without re-running the
+  reference — e.g. archive ``turing_oracle`` (the hardware proxy) once,
+  then replay under ``hanoi`` to reproduce the paper's headline metric.
+
+Replay executes through :meth:`repro.engine.Simulator.run_batch` (grouped
+per mechanism, so signature-homogeneous JAX groups hit the native vmap
+``batch_runner``) or, when a running
+:class:`~repro.service.SimulationService` is supplied, through its queue —
+the fleet path.  The Levenshtein itself is the bit-parallel Myers
+implementation in :mod:`repro.core.trace`, which is what makes
+million-warp archives tractable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterable
+
+import numpy as np
+
+# the one nearest-rank percentile the service latency stats also use
+from repro.core.trace import levenshtein, nearest_rank, trace_tokens
+from repro.engine.registry import get_mechanism
+from repro.engine.simulator import Simulator
+
+from .reader import ArchivedRun, ArchiveReader, ReadReport
+
+__all__ = ["Aggregate", "Replayer", "ReplayReport", "ReplayRow",
+           "nearest_rank"]
+
+
+@dataclass(frozen=True)
+class ReplayRow:
+    """One archived run diffed against its replay."""
+
+    index: int                   # ordinal of the run in the archive
+    program: str
+    archived_mechanism: str
+    replay_mechanism: str
+    edit_distance: int
+    discrepancy: float           # edit_distance / len(archived trace)
+    archived_trace_len: int
+    replayed_trace_len: int
+    archived_status: str
+    replayed_status: str
+
+    @property
+    def discrepancy_pct(self) -> float:
+        return 100.0 * self.discrepancy
+
+    @property
+    def pair(self) -> str:
+        """Breakdown key: replayed mechanism vs the archived reference."""
+        return f"{self.replay_mechanism} vs {self.archived_mechanism}"
+
+
+@dataclass(frozen=True)
+class Aggregate:
+    """Count / mean / nearest-rank percentiles over one slice of rows."""
+
+    count: int
+    mean: float
+    p50: float
+    p90: float
+    p99: float
+    max: float
+
+    @classmethod
+    def of(cls, values: Iterable[float]) -> "Aggregate":
+        vals = sorted(float(v) for v in values)
+        if not vals:
+            nan = float("nan")
+            return cls(0, nan, nan, nan, nan, nan)
+        return cls(len(vals), float(np.mean(vals)),
+                   nearest_rank(vals, 0.50), nearest_rank(vals, 0.90),
+                   nearest_rank(vals, 0.99), vals[-1])
+
+    def render(self) -> str:
+        return (f"n={self.count} mean={100 * self.mean:.2f}% "
+                f"p50={100 * self.p50:.2f}% p90={100 * self.p90:.2f}% "
+                f"p99={100 * self.p99:.2f}% max={100 * self.max:.2f}%")
+
+
+@dataclass(frozen=True)
+class ReplayReport:
+    """Fleet-scale discrepancy report over one archive replay.
+
+    ``rows`` hold every replayed run in archive order; the aggregates are
+    the paper's Fig 9 summary statistics over whatever slice you ask for.
+    ``skipped_unreplayable`` counts runs with no (or undecodable) replay
+    payload — e.g. per-warp SM-cell archives; ``skipped_untraced`` counts
+    runs archived with ``record_trace=False`` (their replay would diff one
+    empty trace against another); ``skipped_unknown_mechanism`` counts
+    runs whose archived mechanism is not registered in this process (a
+    plugin archive replayed without the plugin — the rest of the fleet
+    still replays).  ``read`` is the reader's accounting for the iteration
+    that produced the rows (``None`` when the replayer was handed pre-read
+    runs instead of an archive).
+    """
+
+    rows: tuple[ReplayRow, ...]
+    skipped_unreplayable: int
+    skipped_untraced: int
+    skipped_unknown_mechanism: int = 0
+    read: ReadReport | None = None
+
+    @property
+    def replayed(self) -> int:
+        return len(self.rows)
+
+    def overall(self) -> Aggregate:
+        return Aggregate.of(r.discrepancy for r in self.rows)
+
+    def mean_discrepancy(self) -> float:
+        return self.overall().mean
+
+    def _slices(self, key) -> dict[str, Aggregate]:
+        groups: dict[str, list[float]] = {}
+        for r in self.rows:
+            groups.setdefault(key(r), []).append(r.discrepancy)
+        return {k: Aggregate.of(v) for k, v in sorted(groups.items())}
+
+    def by_mechanism(self) -> dict[str, Aggregate]:
+        """Per (replay vs archived) mechanism pair."""
+        return self._slices(lambda r: r.pair)
+
+    def by_program(self) -> dict[str, Aggregate]:
+        return self._slices(lambda r: r.program or "<anonymous>")
+
+    def render(self) -> str:
+        """Human-readable report (the CLI surface prints exactly this)."""
+        out = []
+        if self.read is not None:
+            rd = self.read
+            health = ("clean" if rd.clean else
+                      f"truncated_tail={bool(rd.truncated_tail)} "
+                      f"truncated={rd.truncated_runs} "
+                      f"interrupted={rd.interrupted_runs} "
+                      f"orphans={rd.orphan_events} "
+                      f"corrupt={rd.corrupt_lines}")
+            out.append(f"[archive] {len(rd.files)} file(s), {rd.runs} "
+                       f"run(s) read ({health})")
+        skips = (f"skipped: {self.skipped_unreplayable} unreplayable, "
+                 f"{self.skipped_untraced} untraced")
+        if self.skipped_unknown_mechanism:
+            skips += (f", {self.skipped_unknown_mechanism} "
+                      f"unknown-mechanism")
+        out.append(f"[replay] {self.replayed} run(s) replayed ({skips})")
+        if self.rows:
+            out.append(f"[replay] overall: {self.overall().render()}")
+            by_pair = self.by_mechanism()
+            if by_pair:
+                out.append("[replay] by mechanism pair:")
+                width = max(len(k) for k in by_pair)
+                for k, agg in by_pair.items():
+                    out.append(f"    {k:<{width}}  {agg.render()}")
+            by_prog = self.by_program()
+            if len(by_prog) > 1:
+                out.append("[replay] by program:")
+                width = max(len(k) for k in by_prog)
+                for k, agg in by_prog.items():
+                    out.append(f"    {k:<{width}}  {agg.render()}")
+        return "\n".join(out)
+
+
+class Replayer:
+    """Re-executes archived runs and diffs replayed vs archived traces.
+
+    Parameters
+    ----------
+    mechanism:
+        ``None`` replays each run under its *archived* mechanism (the
+        self-replay integrity check — deterministic mechanisms must come
+        back bit-equal).  A registry name replays every run under that
+        mechanism instead: the offline Fig 9, with the archive as the
+        reference side of the diff.
+    simulator:
+        The :class:`~repro.engine.Simulator` used for batch replay
+        (a default one is built when omitted).  Replay requests are grouped
+        per mechanism, so homogeneous JAX groups take the native vmap path.
+    service:
+        A *running* :class:`~repro.service.SimulationService` to replay
+        through instead of the simulator — the queue-fed fleet path.
+    """
+
+    def __init__(self, mechanism: str | None = None, *,
+                 simulator: Simulator | None = None,
+                 service: Any = None) -> None:
+        self._override = (get_mechanism(mechanism).name
+                          if mechanism else None)
+        self._sim = simulator or Simulator()
+        self._service = service
+
+    def replay(self, source: "str | ArchiveReader | Iterable[ArchivedRun]",
+               *, limit: int | None = None) -> ReplayReport:
+        """Replay ``source`` (a directory, reader, or pre-read runs)."""
+        reader: ArchiveReader | None = None
+        if isinstance(source, str):
+            reader = ArchiveReader(source)
+        elif isinstance(source, ArchiveReader):
+            reader = source
+        runs = (reader.runs(limit) if reader is not None
+                else list(source)[:limit] if limit is not None
+                else list(source))
+
+        skipped_unreplayable = skipped_untraced = skipped_unknown = 0
+        by_mech: dict[str, list[tuple[int, ArchivedRun, Any]]] = {}
+        for idx, run in enumerate(runs):
+            req = run.request()
+            if req is None:
+                skipped_unreplayable += 1
+                continue
+            if not run.traced:
+                skipped_untraced += 1
+                continue
+            # the begin meta records what the run was *served* under; the
+            # end event's mechanism is whatever the runner returned (a
+            # delegating plugin reports its inner engine there)
+            mech = self._override or \
+                str(run.meta.get("mechanism") or "") or run.mechanism
+            try:
+                mech = get_mechanism(mech).name
+            except KeyError:
+                # a plugin archive replayed in a process without the
+                # plugin: skip this run, keep the fleet going
+                skipped_unknown += 1
+                continue
+            by_mech.setdefault(mech, []).append((idx, run, req))
+
+        rows: list[ReplayRow] = []
+        for mech, items in by_mech.items():
+            reqs = [req for _, _, req in items]
+            if self._service is not None:
+                tickets = [self._service.submit(r, mechanism=mech)
+                           for r in reqs]
+                self._service.flush()
+                results = [t.result() for t in tickets]
+            else:
+                results = self._sim.run_batch(reqs, mechanism=mech)
+            for (idx, run, req), res in zip(items, results):
+                archived = trace_tokens(list(run.trace))
+                replayed = trace_tokens(list(res.trace))
+                dist = int(levenshtein(replayed, archived))
+                rows.append(ReplayRow(
+                    index=idx, program=run.program or req.name,
+                    archived_mechanism=run.mechanism,
+                    replay_mechanism=mech,
+                    edit_distance=dist,
+                    discrepancy=dist / max(1, len(archived)),
+                    archived_trace_len=len(archived),
+                    replayed_trace_len=len(replayed),
+                    archived_status=run.status,
+                    replayed_status=res.status.value))
+        rows.sort(key=lambda r: r.index)
+        return ReplayReport(rows=tuple(rows),
+                            skipped_unreplayable=skipped_unreplayable,
+                            skipped_untraced=skipped_untraced,
+                            skipped_unknown_mechanism=skipped_unknown,
+                            read=reader.report if reader is not None
+                            else None)

@@ -41,7 +41,9 @@ Layout
   ``sm_interleave`` (per-SM multi-warp time-multiplexing);
 * :mod:`repro.engine.sinks`     — pluggable :class:`TraceSink` consumers
   (:class:`MemorySink`, :class:`JsonlSink`, :class:`RingBufferSink`, the
-  rotating archival :class:`RotatingJsonlSink`);
+  rotating archival :class:`RotatingJsonlSink`); :func:`run_meta` stamps
+  begin events with a ``replay`` payload, making archives replayable
+  offline by :mod:`repro.archive` (read + Fig 9 diffing at archive scale);
 * :mod:`repro.engine.simulator` — the :class:`Simulator` façade with
   ``run`` / ``run_batch`` / ``run_sm`` / ``compare``; batch dispatch is
   shared with :mod:`repro.service` (the queue-fed simulation service —
@@ -70,7 +72,7 @@ from .registry import (Mechanism, available_mechanisms, get_mechanism,
                        iter_mechanisms, register_mechanism,
                        unregister_mechanism)
 from .sinks import (JsonlSink, MemorySink, RingBufferSink, RotatingJsonlSink,
-                    TraceSink, feed_result)
+                    TraceSink, feed_result, replay_payload, run_meta)
 from .types import (SimRequest, SimResult, SimStatus, SmResult,
                     classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
@@ -83,5 +85,5 @@ __all__ = [
     "SimResult", "SimStatus", "SmResult", "Simulator", "TraceSink",
     "as_request", "available_mechanisms", "classify_status", "feed_result",
     "get_mechanism", "iter_mechanisms", "register_mechanism",
-    "unregister_mechanism", "worst_status",
+    "replay_payload", "run_meta", "unregister_mechanism", "worst_status",
 ]

@@ -22,7 +22,7 @@ from repro.core.timing import TimingConfig, ipc_delta, simulate
 from repro.core.trace import discrepancy
 
 from .registry import Mechanism, get_mechanism
-from .sinks import TraceSink, feed_result
+from .sinks import TraceSink, feed_result, run_meta
 from .types import SimRequest, SimResult, SmResult
 
 ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
@@ -336,7 +336,6 @@ class Simulator:
     @staticmethod
     def _feed_sink(sink: TraceSink | None, mech: Mechanism,
                    req: SimRequest, result: SimResult) -> None:
-        feed_result(sink, result,
-                    {"mechanism": mech.name, "program": req.name,
-                     "n_threads": req.resolved_cfg().n_threads,
-                     "program_len": int(np.asarray(req.program).shape[0])})
+        if sink is None:       # don't build the replay payload just to
+            return             # throw it away — run/run_batch hot path
+        feed_result(sink, result, run_meta(mech.name, req))

@@ -27,6 +27,7 @@ Simulator façade and the simulation service both use.
 """
 from __future__ import annotations
 
+import codecs
 import json
 import os
 import queue
@@ -34,7 +35,9 @@ import threading
 from collections import deque
 from typing import Any, IO, Mapping
 
-from .types import SimResult
+import numpy as np
+
+from .types import SimRequest, SimResult
 
 
 class TraceSink:
@@ -105,6 +108,77 @@ def end_event(result: SimResult) -> dict[str, Any]:
             "error": result.error}
 
 
+def _sanitize(value: Any) -> Any:
+    """Best-effort coercion to JSON-able types; raises TypeError otherwise."""
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if isinstance(value, np.bool_):
+        return bool(value)
+    if isinstance(value, np.integer):
+        return int(value)
+    if isinstance(value, np.floating):
+        return float(value)
+    if isinstance(value, np.ndarray):
+        return value.tolist()
+    if isinstance(value, (list, tuple)):
+        return [_sanitize(v) for v in value]
+    if isinstance(value, Mapping):
+        return {str(k): _sanitize(v) for k, v in value.items()}
+    raise TypeError(f"not JSON-serializable: {type(value).__name__}")
+
+
+def replay_payload(req: SimRequest) -> dict[str, Any]:
+    """JSON-able encoding of everything needed to re-run ``req``.
+
+    This is the write half of the archive round trip:
+    ``repro.archive.ArchiveReader`` decodes it back into a
+    :class:`~repro.engine.types.SimRequest` (``request_from_meta``) so
+    archived runs can be replayed offline under any registered mechanism.
+    Request ``meta`` entries that cannot be serialized are dropped and
+    listed under ``meta_dropped`` rather than failing the write path.
+    """
+    def arr(x: Any) -> Any:
+        return None if x is None else np.asarray(x).tolist()
+
+    meta: dict[str, Any] = {}
+    dropped: list[str] = []
+    for k, v in req.meta.items():
+        try:
+            meta[str(k)] = _sanitize(v)
+        except TypeError:
+            dropped.append(str(k))
+    payload: dict[str, Any] = {
+        "program": np.asarray(req.program).tolist(),
+        "cfg": dict(req.cfg._asdict()),
+        "init_regs": arr(req.init_regs),
+        "init_mem": arr(req.init_mem),
+        "lane_ids": arr(req.lane_ids),
+        "active0": None if req.active0 is None else int(req.active0),
+        "fuel": None if req.fuel is None else int(req.fuel),
+        "record_trace": bool(req.record_trace),
+        "majority_first": bool(req.majority_first),
+        "bsync_skip_pcs": [int(p) for p in req.bsync_skip_pcs],
+        "name": req.name,
+        "meta": meta,
+    }
+    if dropped:
+        payload["meta_dropped"] = sorted(dropped)
+    return payload
+
+
+def run_meta(mechanism: str, req: SimRequest) -> dict[str, Any]:
+    """The canonical begin-event meta for one request.
+
+    Human-readable identification (mechanism, program name, shape) plus the
+    ``replay`` payload that makes the archive round-trippable — the one
+    meta builder the Simulator façade and the simulation service share.
+    """
+    return {"mechanism": mechanism, "program": req.name,
+            "n_threads": req.resolved_cfg().n_threads,
+            "program_len": int(np.asarray(req.program).shape[0]),
+            "replay": replay_payload(req)}
+
+
 class JsonlSink(TraceSink):
     """Streams events as JSON lines to ``path`` (or an open file object)."""
 
@@ -115,10 +189,18 @@ class JsonlSink(TraceSink):
         else:
             self._fh = path_or_file
             self._owns = False
+        # native UTF-8 (not \uXXXX escapes) — but only when the handle can
+        # take it: a caller-supplied file opened with a legacy encoding
+        # would raise UnicodeEncodeError mid-stream, so fall back to
+        # ASCII-escaped output there
+        enc = getattr(self._fh, "encoding", None)
+        self._ensure_ascii = (enc is not None
+                              and codecs.lookup(enc).name != "utf-8")
         self.events_written = 0
 
     def _write(self, obj: Mapping[str, Any]) -> None:
-        self._fh.write(json.dumps(obj, separators=(",", ":")) + "\n")
+        self._fh.write(json.dumps(obj, separators=(",", ":"),
+                                  ensure_ascii=self._ensure_ascii) + "\n")
         self.events_written += 1
 
     def begin(self, meta: Mapping[str, Any]) -> None:
@@ -168,6 +250,18 @@ class RotatingJsonlSink(TraceSink):
     draining and *dropping* chunks (counted in ``runs_dropped``) so
     ``end()``/``flush()`` stay non-blocking.  Callers that need durability
     guarantees check ``write_error`` after ``flush()``.
+
+    Protocol violations degrade the same way — counted, never enqueued:
+    an ``end()`` with no matching ``begin()`` on that thread is dropped
+    (``runs_malformed``; the chunk would be unreadable by
+    ``repro.archive.ArchiveReader``), an ``emit()`` outside a run is
+    dropped (``events_orphaned``), and a ``begin()`` over a stale buffer
+    left by a producer that errored between ``begin`` and ``end`` discards
+    the unfinished run (``runs_stale``) before starting the new one.
+
+    ``max_bytes`` and ``bytes_written`` are measured in *encoded UTF-8
+    bytes* (what actually lands on disk), not characters — non-ASCII
+    request meta rotates at the same on-disk size as ASCII.
     """
 
     def __init__(self, directory: str, *, prefix: str = "traces",
@@ -181,8 +275,14 @@ class RotatingJsonlSink(TraceSink):
         self.paths: list[str] = []
         self.runs_written = 0
         self.runs_dropped = 0                 # chunks dropped after an error
-        self.bytes_written = 0
+        self.runs_malformed = 0               # end() with no matching begin()
+        self.runs_stale = 0                   # begin() over an unfinished run
+        self.events_orphaned = 0              # emit() outside begin()..end()
+        self.bytes_written = 0                # encoded UTF-8 bytes on disk
         self.write_error: Exception | None = None   # first writer failure
+        # protocol-violation counters are bumped from producer threads;
+        # a bare += is a non-atomic read-modify-write and loses counts
+        self._counter_lock = threading.Lock()
         self._local = threading.local()
         self._q: "queue.Queue[str | None]" = queue.Queue(maxsize=queue_size)
         self._fh: IO[str] | None = None
@@ -203,17 +303,38 @@ class RotatingJsonlSink(TraceSink):
     def _append(self, obj: Mapping[str, Any]) -> None:
         if self._closed:
             raise RuntimeError("RotatingJsonlSink is closed")
-        self._lines().append(json.dumps(obj, separators=(",", ":")) + "\n")
+        self._lines().append(json.dumps(obj, separators=(",", ":"),
+                                        ensure_ascii=False) + "\n")
+
+    def _active(self) -> bool:
+        return getattr(self._local, "active", False)
 
     def begin(self, meta: Mapping[str, Any]) -> None:
+        if self._active():
+            with self._counter_lock:     # producer died between begin/end
+                self.runs_stale += 1
         self._lines().clear()
+        self._local.active = False
         self._append(begin_event(meta))
+        self._local.active = True
 
     def emit(self, pc: int, mask: int) -> None:
+        if not self._active():
+            with self._counter_lock:
+                self.events_orphaned += 1
+            return
         self._append(issue_event(pc, mask))
 
     def end(self, result: SimResult) -> None:
+        if not self._active():
+            # no matching begin(): enqueuing would archive an unreadable
+            # chunk — drop it and count instead
+            with self._counter_lock:
+                self.runs_malformed += 1
+            self._lines().clear()
+            return
         self._append(end_event(result))
+        self._local.active = False
         lines = self._lines()
         self._q.put("".join(lines))
         lines.clear()
@@ -238,15 +359,19 @@ class RotatingJsonlSink(TraceSink):
                 if self.write_error is not None:
                     self.runs_dropped += 1       # degraded: ack + drop
                     continue
+                # measure what hits the disk: encoded bytes, not characters
+                # (len(chunk) undercounts non-ASCII meta and would let
+                # files overshoot max_bytes)
+                nbytes = len(chunk.encode("utf-8"))
                 if (self._fh is None
                         or (self._cur_bytes > 0
-                            and self._cur_bytes + len(chunk)
+                            and self._cur_bytes + nbytes
                             > self.max_bytes)):
                     self._rotate()
                 self._fh.write(chunk)
                 self._fh.flush()
-                self._cur_bytes += len(chunk)
-                self.bytes_written += len(chunk)
+                self._cur_bytes += nbytes
+                self.bytes_written += nbytes
                 self.runs_written += 1
             except Exception as exc:             # disk full, dir deleted, ...
                 # the writer must keep draining and acking chunks: dying

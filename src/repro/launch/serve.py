@@ -13,6 +13,11 @@ execution signature, routed to the vmap-batched JAX ``batch_runner`` when
 homogeneous, archived through a (rotating) JSONL sink, and reported with
 service metrics (queue depth, latency percentiles, warps/s, batch fill).
 
+``--mode replay`` is the offline half of archival: read a
+``RotatingJsonlSink`` archive back (``repro.archive``), re-run every
+replayable request, and report the trace-discrepancy aggregate — the
+paper's Fig 9 from the durable archive instead of a live run.
+
 Usage:
   python -m repro.launch.serve --arch rwkv6-3b --batch 4 --prompt-len 16 \\
       --gen-len 32
@@ -23,6 +28,10 @@ Usage:
       --batch 24
   python -m repro.launch.serve --mode sim --sm-warps 8 --sm-policy \\
       greedy_then_oldest --mechanism hanoi --bench RBFS0
+  python -m repro.launch.serve --mode sim --batch 16 --record-trace \\
+      --archive-dir sim-archive
+  python -m repro.launch.serve --mode replay --archive-dir sim-archive \\
+      --replay-mechanism turing_oracle
 """
 from __future__ import annotations
 
@@ -157,7 +166,7 @@ def _sim_main(args) -> None:
                     program=bench.program, cfg=cfg,
                     init_mem=rng.integers(0, 8, size=cfg.mem_size)
                     .astype(np.int32),
-                    record_trace=False, name=f"req{i}"))
+                    record_trace=args.record_trace, name=f"req{i}"))
                 mechs.append(mix[i % len(mix)])
             t0 = time.time()
             tickets = [svc.submit(r, mechanism=m)
@@ -183,9 +192,24 @@ def _sim_main(args) -> None:
              f"{len(archive.paths)} file(s)" if archive else ""))
 
 
+def _replay_main(args) -> None:
+    from repro.archive import ArchiveReader, Replayer
+
+    if not args.archive_dir:
+        raise SystemExit("--mode replay requires --archive-dir")
+    reader = ArchiveReader(args.archive_dir, prefix=args.archive_prefix)
+    replayer = Replayer(args.replay_mechanism or None)
+    t0 = time.time()
+    report = replayer.replay(reader, limit=args.limit or None)
+    dt = time.time() - t0
+    print(report.render())
+    print(f"[serve:replay] {report.replayed} run(s) in {dt:.3f}s "
+          f"({report.replayed / max(dt, 1e-9):.0f} warps/s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "sim"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "sim", "replay"], default="lm")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -211,11 +235,26 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="[sim] coalescer deadline-flush threshold (ms)")
     ap.add_argument("--archive-dir", default="",
-                    help="[sim] archive traces to rotating JSONL files "
-                         "in this directory")
+                    help="[sim] archive traces to rotating JSONL files in "
+                         "this directory; [replay] the archive to replay")
+    ap.add_argument("--record-trace", action="store_true",
+                    help="[sim] record control-flow traces on served "
+                         "requests (required for a replayable/diffable "
+                         "archive; off by default to keep serving lean)")
+    ap.add_argument("--archive-prefix", default="traces",
+                    help="[replay] archive file prefix")
+    ap.add_argument("--replay-mechanism", default="",
+                    help="[replay] mechanism to replay under (default: "
+                         "each run's archived mechanism — the self-replay "
+                         "integrity check)")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="[replay] replay at most N runs (0 = all)")
     args = ap.parse_args()
     if args.mode == "sim":
         _sim_main(args)
+        return
+    if args.mode == "replay":
+        _replay_main(args)
         return
     res = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen_len)

@@ -47,13 +47,12 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
-import numpy as np
-
 from repro.core.isa import MachineConfig
 from repro.core.timing import TimingConfig
+from repro.core.trace import nearest_rank
 from repro.engine.registry import get_mechanism
 from repro.engine.simulator import ProgramLike, Simulator, as_request
-from repro.engine.sinks import TraceSink, feed_result
+from repro.engine.sinks import TraceSink, feed_result, run_meta
 from repro.engine.types import SimRequest, SimResult, SmResult
 
 from .coalescer import BatchCoalescer, FlushedGroup
@@ -347,11 +346,6 @@ class SimulationService:
             fill = tuple(sorted(self._fill.items()))
             uptime = max(1e-9, now - self._started_at)
 
-        def pct(p: float) -> float:
-            if not lat:
-                return float("nan")
-            return lat[min(len(lat) - 1, int(p * len(lat)))]
-
         return ServiceStats(
             uptime_s=uptime,
             submitted=s["submitted"], completed=s["completed"],
@@ -363,7 +357,8 @@ class SimulationService:
             flush_size=s["flush_size"], flush_deadline=s["flush_deadline"],
             flush_manual=s["flush_manual"],
             batch_fill=fill,
-            latency_p50_s=pct(0.50), latency_p99_s=pct(0.99),
+            latency_p50_s=nearest_rank(lat, 0.50),
+            latency_p99_s=nearest_rank(lat, 0.99),
             warps_per_s=s["completed"] / uptime)
 
     # -- internals: flusher -------------------------------------------------
@@ -473,8 +468,6 @@ class SimulationService:
             return
         if meta is None:
             assert req is not None
-            meta = {"mechanism": mechanism, "program": req.name,
-                    "n_threads": req.resolved_cfg().n_threads,
-                    "program_len": int(np.asarray(req.program).shape[0])}
+            meta = run_meta(mechanism, req)   # replayable begin event
         with self._archive_lock:
             feed_result(self._archive, result, meta)

@@ -1,0 +1,422 @@
+"""Archive read/replay: the offline half of the durable archival path.
+
+Acceptance contract (ISSUE 4):
+
+* a service-written archive (>= 2 rotations, one degraded/truncated tail)
+  reads back run-for-run through ``ArchiveReader`` — the truncated tail is
+  *reported*, never raised;
+* replaying the archive reproduces the live ``Simulator.compare``
+  discrepancy numbers **bit-equal per run**, for every mechanism in
+  ``iter_mechanisms()`` (self-replay is exactly 0.0);
+* the Myers bit-parallel ``levenshtein`` equals the classic DP exactly
+  (seeded-random differential here; the hypothesis property lives in
+  ``test_property_core``).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.archive import (ArchiveReader, Replayer, ReplayReport,
+                           nearest_rank, request_from_meta)
+from repro.archive.replay import Aggregate
+from repro.core import MachineConfig
+from repro.core.programs import make_suite
+from repro.core.trace import levenshtein, levenshtein_dp, trace_tokens
+from repro.engine import (RotatingJsonlSink, SimRequest, Simulator,
+                          as_request, feed_result, iter_mechanisms, run_meta)
+from repro.service import SimulationService
+
+CFG = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+SUITE = make_suite(CFG, datasets=1)
+SIM = Simulator("hanoi")
+# deadlock-free on every registered mechanism; BFSD carries bsync_skip_pcs
+# so the turing_oracle rows are non-trivial
+BENCH_NAMES = ("HOTS0", "DIAMOND", "BFSD")
+
+
+def _bench(name):
+    return next(b for b in SUITE if b.name == name)
+
+
+def _write_archive(tmp_path, mechanisms, *, max_bytes=4096, names=BENCH_NAMES,
+                   workers=1):
+    """Serve every (bench, mechanism) pair into a rotating archive."""
+    sink = RotatingJsonlSink(str(tmp_path), max_bytes=max_bytes)
+    with SimulationService(default_mechanism="hanoi", max_batch=4,
+                           max_wait_s=0.01, workers=workers,
+                           archive=sink) as svc:
+        tickets = [svc.submit(_bench(n), CFG, mechanism=m)
+                   for m in mechanisms for n in names]
+        svc.flush()
+        results = [t.result() for t in tickets]
+    sink.flush()
+    sink.close()
+    assert all(r.error is None for r in results)
+    return sink
+
+
+# ---------------------------------------------------------------------------
+# Myers levenshtein == DP (differential; hypothesis property in
+# test_property_core)
+# ---------------------------------------------------------------------------
+
+def test_levenshtein_myers_equals_dp_seeded():
+    rng = np.random.default_rng(1234)
+    for _ in range(400):
+        n, m = rng.integers(0, 48, size=2)
+        alpha = int(rng.integers(1, 8))
+        a = rng.integers(0, alpha, size=n)
+        b = rng.integers(0, alpha, size=m)
+        assert levenshtein(a, b) == levenshtein_dp(a, b)
+
+
+def test_levenshtein_edges():
+    assert levenshtein([], []) == 0
+    assert levenshtein([], [1, 2]) == 2
+    assert levenshtein([1, 2, 3], []) == 3
+    assert levenshtein([1, 2, 3], [1, 2, 3]) == 0
+    assert levenshtein([1, 2, 3], [4, 5, 6]) == 3
+    assert levenshtein([1], [1, 2, 3, 4]) == 3
+    # asymmetric lengths exercise the pattern/text swap
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 5, size=300)
+    b = rng.integers(0, 5, size=20)
+    assert levenshtein(a, b) == levenshtein_dp(a, b)
+    assert levenshtein(a, b) == levenshtein(b, a)
+
+
+def test_levenshtein_on_real_traces():
+    ra = SIM.run(_bench("BFSD"), CFG)
+    rb = SIM.run(_bench("BFSD"), CFG, mechanism="turing_oracle")
+    ta, tb = trace_tokens(list(ra.trace)), trace_tokens(list(rb.trace))
+    assert levenshtein(ta, tb) == levenshtein_dp(ta, tb) > 0
+    assert levenshtein(ta, ta) == 0
+
+
+# ---------------------------------------------------------------------------
+# reader: rotation, reassembly, meta normalization
+# ---------------------------------------------------------------------------
+
+def test_reader_reassembles_rotated_archive(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi"])
+    assert len(sink.paths) >= 2                     # forced >= 2 rotations
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert reader.report.clean
+    assert len(runs) == sink.runs_written == len(BENCH_NAMES)
+    by_prog = {r.program: r for r in runs}
+    assert set(by_prog) == set(BENCH_NAMES)
+    for name in BENCH_NAMES:
+        run = by_prog[name]
+        live = SIM.run(_bench(name), CFG)
+        assert run.trace == live.trace              # tuples, not JSON lists
+        assert isinstance(run.trace, tuple)
+        assert run.status == live.status.value
+        assert run.steps == live.steps
+        assert run.fuel_left == live.fuel_left
+        assert run.mechanism == "hanoi"
+        assert run.replayable
+
+
+def test_request_round_trips_through_meta():
+    req = as_request(_bench("BFSD"), CFG, fuel=4096,
+                     majority_first=False,
+                     meta={"itps_patience": 3, "tags": [1, 2]})
+    meta = run_meta("hanoi", req)
+    back = request_from_meta(json.loads(json.dumps(meta)))  # via JSON
+    assert back is not None
+    np.testing.assert_array_equal(back.program, req.program)
+    np.testing.assert_array_equal(back.init_mem, req.init_mem)
+    assert back.cfg == req.cfg
+    assert back.fuel == 4096 and back.majority_first is False
+    assert back.bsync_skip_pcs == req.bsync_skip_pcs != ()
+    assert back.meta["itps_patience"] == 3
+    assert back.meta["tags"] == (1, 2)              # JSON list -> tuple
+    assert back.name == req.name
+
+
+def test_request_from_meta_without_payload_is_none():
+    assert request_from_meta({"mechanism": "hanoi", "program": "x"}) is None
+    assert request_from_meta({"replay": {"cfg": {}}}) is None   # undecodable
+
+
+# ---------------------------------------------------------------------------
+# degradation: truncated tail is reported, never raised
+# ---------------------------------------------------------------------------
+
+def test_reader_tolerates_truncated_tail_line(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi"])
+    last = sink.paths[-1]
+    raw = open(last, encoding="utf-8").read()
+    # chop the trailing newline plus half the final event: a writer killed
+    # mid-write
+    open(last, "w", encoding="utf-8").write(raw[:-max(10, len(raw) // 50)])
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()                             # does not raise
+    assert reader.report.truncated_tail == last
+    assert reader.report.truncated_runs == 1
+    assert len(runs) == sink.runs_written - 1
+    # the surviving runs replay clean
+    report = Replayer().replay(runs)
+    assert report.replayed == len(runs)
+    assert report.mean_discrepancy() == 0.0
+
+
+def test_reader_tolerates_file_ending_mid_run(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi"])
+    last = sink.paths[-1]
+    lines = open(last, encoding="utf-8").read().splitlines(keepends=True)
+    # drop the end event but keep whole lines: node died between lines
+    open(last, "w", encoding="utf-8").writelines(lines[:-1])
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert reader.report.truncated_tail == last
+    assert reader.report.truncated_runs == 1
+    assert len(runs) == sink.runs_written - 1
+
+
+def test_reader_counts_mid_archive_corruption(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi"])
+    first = sink.paths[0]
+    lines = open(first, encoding="utf-8").read().splitlines(keepends=True)
+    lines[1] = "{not json}\n"                        # corrupt one issue line
+    open(first, "w", encoding="utf-8").writelines(lines)
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert reader.report.corrupt_lines == 1
+    assert reader.report.interrupted_runs == 1       # that run is discarded
+    assert len(runs) == sink.runs_written - 1
+    assert not reader.report.clean
+
+
+def test_reader_missing_directory_raises():
+    with pytest.raises(FileNotFoundError):
+        ArchiveReader("/nonexistent/archive/dir")
+
+
+# ---------------------------------------------------------------------------
+# the acceptance round trip: service -> archive -> replay == live compare,
+# for every registered mechanism
+# ---------------------------------------------------------------------------
+
+def test_round_trip_replay_matches_live_compare_every_mechanism(tmp_path):
+    mechanisms = [m.name for m in iter_mechanisms()]
+    sink = _write_archive(tmp_path, mechanisms, max_bytes=8192)
+    assert len(sink.paths) >= 2                      # >= 2 rotations
+
+    # degrade the tail: lop off half of the final line (crashed writer)
+    last = sink.paths[-1]
+    raw = open(last, encoding="utf-8").read()
+    open(last, "w", encoding="utf-8").write(raw[:-20])
+
+    reader = ArchiveReader(str(tmp_path))
+
+    # 1) self-replay: every surviving run is bit-equal (0.0 discrepancy)
+    self_report = Replayer().replay(reader)
+    assert reader.report.truncated_runs == 1
+    expected_rows = len(mechanisms) * len(BENCH_NAMES) - 1
+    assert self_report.replayed == expected_rows
+    assert all(r.discrepancy == 0.0 for r in self_report.rows)
+    assert all(r.replayed_status == r.archived_status
+               for r in self_report.rows)
+
+    # 2) cross-replay under one mechanism == live Simulator.compare,
+    #    bit-equal per run (the offline Fig 9)
+    progs = [_bench(n) for n in BENCH_NAMES]
+    live = SIM.compare(["hanoi"] + [m for m in mechanisms if m != "hanoi"],
+                       progs, CFG, timing=False,
+                       pairs=[("hanoi", m) for m in mechanisms])
+    expect = {(row.program, row.mech_b): row.discrepancy
+              for row in live.rows}
+    cross = Replayer("hanoi").replay(reader)
+    assert cross.replayed == expected_rows
+    for row in cross.rows:
+        key = (row.program, row.archived_mechanism)
+        assert row.discrepancy == expect[key], (key, row)
+    # per-pair breakdown covers every archived mechanism
+    assert {r.archived_mechanism for r in cross.rows} == set(mechanisms)
+
+
+def test_replay_through_running_service(tmp_path):
+    _write_archive(tmp_path, ["hanoi", "simt_stack"])
+    sim_report = Replayer().replay(str(tmp_path))
+    with SimulationService(default_mechanism="hanoi", max_batch=4,
+                           workers=2) as svc:
+        svc_report = Replayer(service=svc).replay(str(tmp_path))
+    assert svc_report.replayed == sim_report.replayed > 0
+    assert [r.discrepancy for r in svc_report.rows] == \
+        [r.discrepancy for r in sim_report.rows]
+    assert svc_report.mean_discrepancy() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# replayability accounting
+# ---------------------------------------------------------------------------
+
+def test_unreplayable_and_untraced_runs_are_counted(tmp_path):
+    sink = RotatingJsonlSink(str(tmp_path))
+    res = SIM.run(_bench("DIAMOND"), CFG)
+    # 1) replayable + traced
+    feed_result(sink, res, run_meta("hanoi", as_request(_bench("DIAMOND"),
+                                                        CFG)))
+    # 2) hand-built meta (the SM-cell warp shape): readable, not replayable
+    feed_result(sink, res, {"mechanism": "hanoi", "program": "sm/w0"})
+    # 3) replayable but archived without a trace
+    req = as_request(_bench("DIAMOND"), CFG, record_trace=False)
+    feed_result(sink, SIM.run(req), run_meta("hanoi", req))
+    sink.flush()
+    sink.close()
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert len(runs) == 3
+    assert [r.replayable for r in runs] == [True, False, True]
+    report = Replayer().replay(runs)
+    assert report.replayed == 1
+    assert report.skipped_unreplayable == 1
+    assert report.skipped_untraced == 1
+    assert report.read is None                       # pre-read runs
+    assert report.rows[0].discrepancy == 0.0
+
+
+def test_sm_cell_archives_read_but_skip_replay(tmp_path):
+    sink = RotatingJsonlSink(str(tmp_path))
+    with SimulationService(default_mechanism="hanoi", workers=1,
+                           archive=sink) as svc:
+        sm = svc.submit_sm(_bench("DIAMOND"), CFG, n_warps=3,
+                           inner="hanoi").result()
+    sink.flush()
+    sink.close()
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert len(runs) == sm.n_warps == 3
+    assert all(not r.replayable for r in runs)
+    assert all(r.meta["sm_policy"] == "round_robin" for r in runs)
+    report = Replayer().replay(reader)
+    assert report.replayed == 0
+    assert report.skipped_unreplayable == 3
+
+
+# ---------------------------------------------------------------------------
+# report aggregation + CLI
+# ---------------------------------------------------------------------------
+
+def test_nearest_rank_and_aggregate():
+    assert nearest_rank([1.0, 2.0], 0.5) == 1.0      # NOT the max
+    assert nearest_rank([1.0, 2.0], 0.99) == 2.0
+    assert np.isnan(nearest_rank([], 0.5))
+    vals = [float(i) for i in range(1, 1001)]
+    assert nearest_rank(vals, 0.5) == 500.0          # index 499, not 500
+    agg = Aggregate.of([0.0, 0.1, 0.2, 0.3])
+    assert agg.count == 4 and agg.p50 == 0.1 and agg.max == 0.3
+    assert agg.mean == pytest.approx(0.15)
+
+
+def test_report_breakdowns_and_render(tmp_path):
+    _write_archive(tmp_path, ["hanoi", "turing_oracle"])
+    report = Replayer("hanoi").replay(str(tmp_path))
+    pairs = report.by_mechanism()
+    assert set(pairs) == {"hanoi vs hanoi", "hanoi vs turing_oracle"}
+    assert pairs["hanoi vs hanoi"].mean == 0.0
+    # BFSD's skipped BSYNCs make the oracle's archived trace diverge
+    assert pairs["hanoi vs turing_oracle"].max > 0.0
+    progs = report.by_program()
+    assert set(progs) == set(BENCH_NAMES)
+    text = report.render()
+    assert "overall:" in text and "by mechanism pair:" in text
+    assert "hanoi vs turing_oracle" in text
+
+
+def test_cli_expect_zero(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    _write_archive(tmp_path, ["hanoi"])
+    assert main([str(tmp_path), "--expect-zero"]) == 0
+    out = capsys.readouterr().out
+    assert "[replay] overall:" in out
+    # cross-mechanism replay is NOT zero on BFSD -> the gate trips
+    assert main([str(tmp_path), "--mechanism", "turing_oracle",
+                 "--expect-zero"]) == 1
+    # empty replay set trips it too
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main([str(empty), "--expect-zero"]) == 1
+
+
+def test_cli_limit(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    _write_archive(tmp_path, ["hanoi"])
+    assert main([str(tmp_path), "--limit", "1"]) == 0
+    assert "[replay] 1 run(s) replayed" in capsys.readouterr().out
+
+
+def test_unknown_archived_mechanism_is_skipped_not_fatal(tmp_path):
+    """A plugin archive replayed in a process without the plugin must not
+    kill the fleet job — the foreign runs are counted, the rest replay."""
+    from repro.engine import register_mechanism, unregister_mechanism
+
+    @register_mechanism("tmp_plugin_mech", description="test-only")
+    def _runner(req):
+        return SIM.run(req)                      # delegate to hanoi
+
+    try:
+        sink = _write_archive(tmp_path, ["hanoi", "tmp_plugin_mech"])
+    finally:
+        unregister_mechanism("tmp_plugin_mech")
+    assert sink.runs_written == 2 * len(BENCH_NAMES)
+    report = Replayer().replay(str(tmp_path))    # plugin no longer exists
+    assert report.skipped_unknown_mechanism == len(BENCH_NAMES)
+    assert report.replayed == len(BENCH_NAMES)   # hanoi runs still replay
+    assert report.mean_discrepancy() == 0.0
+    assert "unknown-mechanism" in report.render()
+
+
+def test_corrupt_complete_tail_line_is_corruption_not_truncation(tmp_path):
+    """truncated_tail fingerprints a crashed writer (partial final line);
+    a newline-terminated line that fails to parse is data corruption."""
+    sink = _write_archive(tmp_path, ["hanoi"])
+    last = sink.paths[-1]
+    lines = open(last, encoding="utf-8").read().splitlines(keepends=True)
+    lines[-1] = "{bit rot}\n"                      # complete but undecodable
+    open(last, "w", encoding="utf-8").writelines(lines)
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert reader.report.truncated_tail is None
+    assert reader.report.corrupt_lines == 1
+    assert reader.report.interrupted_runs == 1     # that run lost its end
+    assert len(runs) == sink.runs_written - 1
+
+
+def test_meta_dropped_payload_is_unreplayable():
+    """A payload whose writer dropped meta entries must not replay as if
+    faithful — the missing mechanism options could change execution."""
+    req = as_request(_bench("DIAMOND"), CFG, meta={"opaque": object()})
+    meta = run_meta("hanoi", req)
+    assert meta["replay"]["meta_dropped"] == ["opaque"]
+    assert request_from_meta(json.loads(json.dumps(meta))) is None
+    # and the Replayer counts it as unreplayable instead of diffing it
+    res = SIM.run(req)
+    report = Replayer().replay([_as_archived(meta, res)])
+    assert report.replayed == 0 and report.skipped_unreplayable == 1
+
+
+def test_numpy_meta_values_survive_payload():
+    req = as_request(_bench("DIAMOND"), CFG,
+                     meta={"flag": np.bool_(True), "n": np.int64(3)})
+    meta = run_meta("hanoi", req)
+    assert "meta_dropped" not in meta["replay"]
+    back = request_from_meta(json.loads(json.dumps(meta)))
+    assert back is not None
+    assert back.meta["flag"] is True
+    assert back.meta["n"] == 3
+
+
+def _as_archived(meta, res):
+    """Wrap a (meta, result) pair as an ArchivedRun for replayer tests."""
+    from repro.archive import ArchivedRun
+    return ArchivedRun(meta=meta, trace=tuple(res.trace),
+                       mechanism=res.mechanism, status=res.status.value,
+                       steps=res.steps, fuel_left=res.fuel_left,
+                       finished=int(res.finished),
+                       utilization=res.utilization, error=res.error,
+                       path="<memory>", line=1)

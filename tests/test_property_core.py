@@ -135,3 +135,18 @@ def test_path_priority_is_correctness_neutral(seed):
     assert not a.deadlocked and not b.deadlocked
     np.testing.assert_array_equal(a.regs[:, CHECK_REGS], b.regs[:, CHECK_REGS])
     np.testing.assert_array_equal(a.mem, b.mem)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.lists(st.integers(0, 9), max_size=48),
+       b=st.lists(st.integers(0, 9), max_size=48))
+def test_levenshtein_myers_equals_dp(a, b):
+    """The Myers bit-parallel edit distance (what archive replay runs at
+    fleet scale) must agree exactly with the classic DP oracle."""
+    from repro.core.trace import levenshtein, levenshtein_dp
+    ta = np.asarray(a, dtype=np.int64)
+    tb = np.asarray(b, dtype=np.int64)
+    d = levenshtein(ta, tb)
+    assert d == levenshtein_dp(ta, tb)
+    assert d == levenshtein(tb, ta)                 # metric symmetry
+    assert (d == 0) == (list(a) == list(b))

@@ -476,3 +476,91 @@ def test_serve_simulations_thin_client():
     assert out["stats"].completed == 4
     for res, req in zip(out["results"], reqs):
         _same_outcome(res, SIM.run(req))
+
+
+# ---------------------------------------------------------------------------
+# regressions (ISSUE 4 satellites): percentile indexing + sink accounting
+# ---------------------------------------------------------------------------
+
+def test_stats_percentiles_nearest_rank():
+    """pct() must be ceil(p*n)-1 nearest-rank: int(p*n) was one-off-high
+    (p50 of 2 samples returned the max; index 500 instead of 499 at
+    n=1000)."""
+    svc = SimulationService(default_mechanism="hanoi")
+    svc._latencies.extend([0.2, 0.1])
+    s = svc.stats()
+    assert s.latency_p50_s == 0.1                  # the lower sample
+    assert s.latency_p99_s == 0.2
+    svc._latencies.clear()
+    svc._latencies.extend(float(i) for i in range(1, 1001))
+    s = svc.stats()
+    assert s.latency_p50_s == 500.0                # index 499, not 500
+    assert s.latency_p99_s == 990.0                # ceil(990)-1 = 989
+    svc._latencies.clear()
+    svc._latencies.append(5.0)
+    s = svc.stats()
+    assert s.latency_p50_s == 5.0 and s.latency_p99_s == 5.0
+    svc._latencies.clear()
+    assert np.isnan(svc.stats().latency_p50_s)
+
+
+def test_rotating_sink_measures_encoded_bytes(tmp_path):
+    """max_bytes rotation and bytes_written must count encoded UTF-8
+    bytes; len(chunk) (characters) undercounts multi-byte meta."""
+    import os
+    from repro.engine import feed_result
+    meta = {"mechanism": "hanoi", "program": "é" * 120}   # 2-byte chars
+    r = SIM.run(_bench("DIAMOND"), CFG)
+    probe = RotatingJsonlSink(str(tmp_path / "probe"))
+    feed_result(probe, r, meta)
+    probe.flush()
+    probe.close()
+    chunk_bytes = os.path.getsize(probe.paths[0])
+    chunk_chars = len(open(probe.paths[0], encoding="utf-8").read())
+    assert chunk_bytes > chunk_chars                      # multi-byte meta
+    # character accounting would pack 2 runs per file; byte accounting
+    # rotates after every run
+    max_bytes = 2 * chunk_chars
+    assert max_bytes < 2 * chunk_bytes
+    sink = RotatingJsonlSink(str(tmp_path / "real"), max_bytes=max_bytes)
+    for _ in range(4):
+        feed_result(sink, r, meta)
+    sink.flush()
+    sink.close()
+    assert len(sink.paths) == 4                           # crossed per run
+    sizes = [os.path.getsize(p) for p in sink.paths]
+    assert all(s <= max_bytes for s in sizes)             # never overshoot
+    assert sink.bytes_written == sum(sizes)               # on-disk truth
+    for path in sink.paths:                               # still valid JSONL
+        for line in open(path, encoding="utf-8"):
+            json.loads(line)
+
+
+def test_rotating_sink_guards_protocol_violations(tmp_path):
+    """end() without begin() and emit() outside a run are dropped and
+    counted (an enqueued chunk with no begin event would be unreadable by
+    ArchiveReader); a begin() over a stale unfinished buffer discards it."""
+    from repro.engine import feed_result
+    sink = RotatingJsonlSink(str(tmp_path))
+    r = SIM.run(_bench("DIAMOND"), CFG)
+    sink.end(r)                                    # no begin: drop + count
+    sink.emit(1, 3)                                # orphan emit: drop + count
+    assert sink.runs_malformed == 1
+    assert sink.events_orphaned == 1
+    feed_result(sink, r, {"mechanism": "hanoi", "program": "good"})
+    # producer that errored between begin and end leaves a stale buffer...
+    sink.begin({"mechanism": "hanoi", "program": "halfdone"})
+    sink.emit(0, 1)
+    # ...which the next begin() on that thread discards
+    sink.begin({"mechanism": "hanoi", "program": "fresh"})
+    sink.emit(0, 1)
+    sink.end(r)
+    sink.flush()
+    sink.close()
+    assert sink.runs_stale == 1
+    assert sink.runs_written == 2                  # "good" and "fresh" only
+    events = [json.loads(l) for p in sink.paths
+              for l in open(p, encoding="utf-8")]
+    begins = [e["program"] for e in events if e["event"] == "begin"]
+    assert begins == ["good", "fresh"]             # no "halfdone" on disk
+    assert sum(e["event"] == "end" for e in events) == 2
