@@ -1,6 +1,6 @@
-"""Archive-path benchmarks: bit-parallel Levenshtein + write/read/replay.
+"""Archive-path benchmarks: Levenshtein, write/read/replay, indexed lookup.
 
-Two sections:
+Three sections:
 
 * **levenshtein** — the Myers bit-parallel edit distance
   (``repro.core.trace.levenshtein``) against the classic DP
@@ -13,6 +13,10 @@ Two sections:
   through ``RotatingJsonlSink``, read them back with ``ArchiveReader``,
   self-replay with ``Replayer`` (asserting 0.0 discrepancy), reporting
   runs/s per stage.
+* **index** — ``ArchiveReader.get(run_id)`` through the sidecar index
+  versus locating the same run by scanning.  The acceptance gate (ISSUE 5)
+  asserts the indexed lookup is >=10x faster than the full scan on a
+  1k-run archive — i.e. ``get`` really seeks instead of scanning.
 
 Run:   PYTHONPATH=src python benchmarks/bench_archive.py
 CI:    PYTHONPATH=src python benchmarks/bench_archive.py --smoke
@@ -25,7 +29,7 @@ import time
 
 import numpy as np
 
-from repro.archive import ArchiveReader, Replayer
+from repro.archive import ArchiveIndex, ArchiveReader, Replayer
 from repro.core import MachineConfig
 from repro.core.programs import make_suite
 from repro.core.trace import levenshtein, levenshtein_dp
@@ -34,6 +38,8 @@ from repro.engine import (RotatingJsonlSink, Simulator, as_request,
 
 GATE_LEN = 2048          # acceptance: >=5x speedup at traces >= 2k tokens
 GATE_SPEEDUP = 5.0
+INDEX_GATE_RUNS = 1000   # acceptance: >=10x indexed get vs full scan at 1k
+INDEX_GATE_SPEEDUP = 10.0
 
 
 def _trace_like_pair(rng: np.random.Generator, n: int,
@@ -128,17 +134,72 @@ def bench_archive(n_runs: int) -> None:
               f"{report.mean_discrepancy():.4f}")
 
 
+def bench_index(n_runs: int = INDEX_GATE_RUNS) -> None:
+    """Indexed get vs full-scan locate of the same (last) run."""
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+    bench = next(b for b in make_suite(cfg, datasets=1)
+                 if b.name == "DIAMOND")
+    sim = Simulator("hanoi")
+    res = sim.run(bench, cfg)
+    meta = run_meta("hanoi", as_request(bench, cfg))
+    print(f"\n== index: O(1) get vs full scan ({n_runs} runs) ==")
+    with tempfile.TemporaryDirectory() as tmp:
+        sink = RotatingJsonlSink(tmp, max_bytes=1 << 20)
+        for _ in range(n_runs):
+            feed_result(sink, res, meta)
+        sink.flush()
+        sink.close()
+
+        t0 = time.perf_counter()
+        idx = ArchiveIndex.build(tmp)
+        t_build = time.perf_counter() - t0
+        assert len(idx) == n_runs
+        target = idx.entries[-1].run_id      # worst case for the scan
+
+        reader = ArchiveReader(tmp)
+        t0 = time.perf_counter()
+        scanned = None
+        for run in reader:                   # sequential locate
+            scanned = run
+        t_scan = time.perf_counter() - t0
+
+        repeats = 20
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            got = reader.get(target)         # seek + read one span
+        t_get = (time.perf_counter() - t0) / repeats
+        assert got.trace == scanned.trace and dict(got.meta) == \
+            dict(scanned.meta), "indexed get must be bit-equal to the scan"
+
+        speedup = t_scan / max(t_get, 1e-9)
+        print(f"{'op':>10} {'wall_s':>10}")
+        print(f"{'build':>10} {t_build:>10.4f}")
+        print(f"{'scan':>10} {t_scan:>10.4f}")
+        print(f"{'get':>10} {t_get:>10.6f}")
+        print(f"indexed speedup: {speedup:.0f}x")
+        if n_runs >= INDEX_GATE_RUNS:
+            assert speedup >= INDEX_GATE_SPEEDUP, (
+                f"acceptance gate: indexed get must be "
+                f">={INDEX_GATE_SPEEDUP}x a full scan at {INDEX_GATE_RUNS} "
+                f"runs; measured {speedup:.1f}x")
+            print(f"gate OK: >= {INDEX_GATE_SPEEDUP}x at >= "
+                  f"{INDEX_GATE_RUNS} runs")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run (still enforces the >=5x gate)")
+                    help="CI-sized run (still enforces the >=5x and >=10x "
+                         "gates)")
     args = ap.parse_args()
     if args.smoke:
         bench_levenshtein((512, GATE_LEN), repeats=1)
         bench_archive(n_runs=60)
+        bench_index(n_runs=INDEX_GATE_RUNS)
     else:
         bench_levenshtein((512, GATE_LEN, 4096))
         bench_archive(n_runs=400)
+        bench_index(n_runs=2 * INDEX_GATE_RUNS)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,12 @@ any mechanism by name:
    admission, signature coalescing onto the native vmap batch runner, a
    sharded (SM, policy) cell, rotating JSONL archival, and service stats;
 6. read the durable archive back (``repro.archive``), replay every run
-   offline, and verify the replayed traces are bit-equal to what was
-   served — the paper's Fig 9 discrepancy metric, from the archive.
+   offline — including the per-warp SM-cell runs, which archive with the
+   full replay payload — and verify the replayed traces are bit-equal to
+   what was served: the paper's Fig 9 discrepancy metric, from the archive;
+7. index the archive (O(1) run lookup via the ``{prefix}.index.jsonl``
+   sidecar), fetch one SM warp by id without scanning, and replay its
+   whole cell.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -114,7 +118,9 @@ with tempfile.TemporaryDirectory() as tmp:
     # the homogeneous hanoi_jax group went through the native vmap runner
     assert all(r.meta["service"]["native"] for r in results[:4])
     assert all(r.ok for r in results) and sm_cell.ok
-    assert archive.runs_written == stats.completed - 1 + sm_cell.n_warps
+    # stats and archive both count warps: 6 single-warp + the 4 SM warps
+    assert stats.completed == len(results) + sm_cell.n_warps
+    assert archive.runs_written == stats.completed
 
     # --- 6. offline archive replay: Fig 9 from the durable archive ----------
     from repro.archive import ArchiveReader, Replayer
@@ -123,12 +129,36 @@ with tempfile.TemporaryDirectory() as tmp:
     replay = Replayer().replay(reader)       # self-replay: integrity check
     print("\n=== archive replay: the served traces, re-run offline ===")
     print(f"read {reader.report.runs} archived runs "
-          f"(clean={reader.report.clean}); replayed {replay.replayed}, "
-          f"skipped {replay.skipped_unreplayable} SM warps")
+          f"(clean={reader.report.clean}); replayed {replay.replayed} "
+          f"incl. {len(replay.by_sm_cell())} SM cell(s)")
     print(f"self-replay discrepancy: "
           f"{replay.mean_discrepancy() * 100:.2f}% (bit-equal traces)")
     # deterministic mechanisms => replay reproduces the archive exactly
     assert replay.mean_discrepancy() == 0.0
-    # the 4 per-warp SM-cell archives carry no replay payload
-    assert replay.skipped_unreplayable == sm_cell.n_warps
+    # the per-warp SM-cell archives now carry the full replay payload and
+    # group back into their cell in the report
+    assert replay.skipped_unreplayable == 0
+    assert replay.replayed == archive.runs_written
+    (cell_agg,) = replay.by_sm_cell().values()
+    assert cell_agg.count == sm_cell.n_warps and cell_agg.max == 0.0
+
+    # --- 7. archive index: O(1) lookup, then replay one cell by id ----------
+    from repro.archive import ArchiveIndex
+
+    idx = ArchiveIndex.build(tmp)            # sidecar {prefix}.index.jsonl
+    # the replayed rows already know which runs were SM warps — fetch just
+    # those by id (each get is one seek + read, no archive scan)
+    sm_ids = [f"run-{row.index:06d}" for row in replay.rows
+              if row.sm_cell is not None]
+    warp = reader.get(sm_ids[0])
+    print("\n=== indexed lookup: one SM warp by run id ===")
+    print(f"indexed {len(idx)} runs; {sm_ids[0]} -> warp "
+          f"{warp.meta['sm_warp']}/{warp.meta['sm_warps']} of cell "
+          f"{warp.sm_cell} ({warp.meta['sm_policy']}, {warp.program})")
+    # replay exactly that cell: its warps, fetched by id
+    cell_runs = [r for r in (reader.get(i) for i in sm_ids)
+                 if r.sm_cell == warp.sm_cell]
+    cell_replay = Replayer().replay(cell_runs)
+    assert cell_replay.replayed == sm_cell.n_warps
+    assert cell_replay.mean_discrepancy() == 0.0
 print("\nquickstart OK")

@@ -1,4 +1,4 @@
-"""repro.archive — offline reading and replay of durable trace archives.
+"""repro.archive — offline reading, replay, and indexing of trace archives.
 
 The simulation service writes every completed warp to rotated JSONL files
 through :class:`~repro.engine.sinks.RotatingJsonlSink`; this package is the
@@ -8,13 +8,26 @@ matching read path, closing the write-path/read-path asymmetry:
   ``{prefix}-NNNNN.jsonl`` files, reassembling ``begin``/``issue``/``end``
   events into ``(pc, mask)`` traces plus request meta, tolerating (and
   accounting for, via :class:`ReadReport`) a truncated tail from a crashed
-  or degraded writer;
+  or degraded writer; :meth:`ArchiveReader.get` fetches one run by id in
+  O(1) through the sidecar index;
+* :class:`ArchiveIndex` / :func:`compact` (:mod:`repro.archive.index`) —
+  the sidecar ``{prefix}.index.jsonl`` mapping run id → byte span
+  (rebuilt automatically on fingerprint mismatch) and the compaction pass
+  that rewrites rotated files dropping corrupt/interrupted debris while
+  preserving intact runs byte-for-byte;
 * :class:`Replayer` — reconstructs each run's
   :class:`~repro.engine.types.SimRequest`, re-executes it under any
   registered mechanism (batched through ``Simulator.run_batch`` or a
   running ``SimulationService``), and emits a :class:`ReplayReport` of
   per-run Levenshtein discrepancies with aggregate / per-mechanism /
-  per-program breakdowns — the paper's Fig 9 at archive scale.
+  per-program / per-SM-cell / per-policy breakdowns — the paper's Fig 9
+  at archive scale.  :meth:`Replayer.watch` tails a still-growing archive
+  and replays new runs incrementally with a rolling aggregate.
+
+SM-cell warps archived through the service (or ``Simulator.run_sm`` with a
+sink) carry the full replay payload plus their cell coordinates
+(``sm_cell``/``sm_warp``/``sm_warps``/``sm_policy``) — they replay exactly
+like single-warp runs and group back into cells in the report.
 
 Quick start::
 
@@ -26,14 +39,20 @@ Quick start::
     fig9 = Replayer("hanoi").replay("oracle-archive")  # offline Fig 9
     print(fig9.render())
 
-CLI: ``python -m repro.archive DIR [--mechanism NAME] [--expect-zero]`` or
-``python -m repro.launch.serve --mode replay --archive-dir DIR``.
+    run = ArchiveReader("sim-archive").get("run-000042")  # O(1), indexed
+
+CLI: ``python -m repro.archive DIR [--mechanism NAME] [--expect-zero]``,
+``python -m repro.archive index|get|compact DIR ...``, or
+``python -m repro.launch.serve --mode replay --archive-dir DIR [--watch]``.
 """
-from .reader import ArchivedRun, ArchiveReader, ReadReport, request_from_meta
+from .index import ArchiveIndex, CompactReport, IndexEntry, compact
+from .reader import (ArchivedRun, ArchiveReader, ReadReport, parse_run,
+                     request_from_meta)
 from .replay import (Aggregate, Replayer, ReplayReport, ReplayRow,
                      nearest_rank)
 
 __all__ = [
-    "Aggregate", "ArchiveReader", "ArchivedRun", "ReadReport", "Replayer",
-    "ReplayReport", "ReplayRow", "nearest_rank", "request_from_meta",
+    "Aggregate", "ArchiveIndex", "ArchiveReader", "ArchivedRun",
+    "CompactReport", "IndexEntry", "ReadReport", "Replayer", "ReplayReport",
+    "ReplayRow", "compact", "nearest_rank", "parse_run", "request_from_meta",
 ]

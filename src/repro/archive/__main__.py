@@ -1,4 +1,4 @@
-"""CLI: replay a RotatingJsonlSink archive and report Fig 9 discrepancy.
+"""CLI: replay, index, compact, and query RotatingJsonlSink archives.
 
 Usage::
 
@@ -6,24 +6,36 @@ Usage::
     python -m repro.archive DIR --mechanism hanoi     # offline Fig 9 vs DIR
     python -m repro.archive DIR --expect-zero         # CI gate: bit-equal
 
+    python -m repro.archive index DIR                 # (re)build the sidecar
+    python -m repro.archive get DIR run-000042        # O(1) indexed lookup
+    python -m repro.archive get DIR run-000042 --json # full run as JSON
+    python -m repro.archive compact DIR               # drop debris, reindex
+
 ``--expect-zero`` exits non-zero unless at least one run replayed and every
 replayed run came back with exactly 0.0 discrepancy — the self-replay
-integrity gate CI runs against a freshly written archive.
+integrity gate CI runs against a freshly written archive.  It refuses to
+gate a *partial* walk (``--limit``): an unscanned tail could hide
+truncation or corruption the walked prefix never sees.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
+from .index import ArchiveIndex, compact
 from .reader import ArchiveReader
 from .replay import Replayer
 
+_SUBCOMMANDS = ("index", "compact", "get")
 
-def main(argv: "list[str] | None" = None) -> int:
+
+def _main_replay(argv: "list[str]") -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.archive",
         description="Replay a rotated JSONL trace archive and report "
-                    "control-flow discrepancy (the paper's Fig 9, offline).")
+                    "control-flow discrepancy (the paper's Fig 9, offline). "
+                    "Subcommands: index DIR / get DIR RUN_ID / compact DIR.")
     ap.add_argument("directory", help="archive directory "
                                       "(RotatingJsonlSink output)")
     ap.add_argument("--prefix", default="traces",
@@ -32,10 +44,12 @@ def main(argv: "list[str] | None" = None) -> int:
                     help="replay mechanism override (default: replay each "
                          "run under its archived mechanism)")
     ap.add_argument("--limit", type=int, default=0,
-                    help="replay at most N runs (0 = all)")
+                    help="replay at most N runs (0 = all; a limited walk "
+                         "cannot be gated with --expect-zero)")
     ap.add_argument("--expect-zero", action="store_true",
-                    help="exit 1 unless >=1 run replayed and every run has "
-                         "exactly 0.0 discrepancy (self-replay gate)")
+                    help="exit 1 unless >=1 run replayed, every run has "
+                         "exactly 0.0 discrepancy, and the whole archive "
+                         "was walked (self-replay gate)")
     args = ap.parse_args(argv)
 
     reader = ArchiveReader(args.directory, prefix=args.prefix)
@@ -44,6 +58,11 @@ def main(argv: "list[str] | None" = None) -> int:
     print(report.render())
 
     if args.expect_zero:
+        if report.read is not None and not report.read.complete:
+            print("[archive] expect-zero FAILED: partial walk (--limit) "
+                  "left the archive tail unvalidated; drop --limit to "
+                  "gate integrity", file=sys.stderr)
+            return 1
         bad = [r for r in report.rows if r.discrepancy != 0.0]
         if not report.rows:
             print("[archive] expect-zero FAILED: no runs replayed",
@@ -56,6 +75,92 @@ def main(argv: "list[str] | None" = None) -> int:
                   f"{worst.discrepancy_pct:.2f}%)", file=sys.stderr)
             return 1
     return 0
+
+
+def _main_index(argv: "list[str]") -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.archive index",
+        description="(Re)build the sidecar index: one scan writes "
+                    "{prefix}.index.jsonl mapping run id -> byte span "
+                    "for O(1) `get` lookups.")
+    ap.add_argument("directory")
+    ap.add_argument("--prefix", default="traces")
+    args = ap.parse_args(argv)
+    idx = ArchiveIndex.build(args.directory, args.prefix)
+    print(f"[index] {len(idx)} run(s) across {len(idx.files)} file(s) "
+          f"-> {idx.path}")
+    if idx.entries:
+        print(f"[index] ids {idx.entries[0].run_id} .. "
+              f"{idx.entries[-1].run_id}")
+    return 0
+
+
+def _main_get(argv: "list[str]") -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.archive get",
+        description="Fetch one archived run by id through the sidecar "
+                    "index (built/rebuilt on demand) — no archive scan.")
+    ap.add_argument("directory")
+    ap.add_argument("run_id", help="e.g. run-000042 (see `index`)")
+    ap.add_argument("--prefix", default="traces")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full run (meta + trace + end fields) "
+                         "as one JSON object")
+    args = ap.parse_args(argv)
+    reader = ArchiveReader(args.directory, prefix=args.prefix)
+    try:
+        run = reader.get(args.run_id)
+    except (KeyError, ValueError) as exc:        # unknown id / stale span
+        print(f"[get] {exc.args[0]}", file=sys.stderr)
+        return 1
+    if args.json:
+        def listify(v):
+            if isinstance(v, tuple):
+                return [listify(x) for x in v]
+            if isinstance(v, dict):
+                return {k: listify(x) for k, x in v.items()}
+            return v
+        print(json.dumps({
+            "id": args.run_id, "file": run.path, "line": run.line,
+            "meta": listify(dict(run.meta)),
+            "trace": [[pc, mask] for pc, mask in run.trace],
+            "mechanism": run.mechanism, "status": run.status,
+            "steps": run.steps, "fuel_left": run.fuel_left,
+            "finished": run.finished, "utilization": run.utilization,
+            "error": run.error}))
+    else:
+        cell = "" if run.sm_cell is None else (
+            f" sm_cell={run.sm_cell} sm_warp={run.meta.get('sm_warp')} "
+            f"sm_policy={run.meta.get('sm_policy')}")
+        print(f"[get] {args.run_id}: program={run.program or '<anonymous>'} "
+              f"mechanism={run.meta.get('mechanism') or run.mechanism} "
+              f"status={run.status} steps={run.steps} "
+              f"trace={len(run.trace)} slot(s) "
+              f"replayable={run.replayable}{cell}")
+    return 0
+
+
+def _main_compact(argv: "list[str]") -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.archive compact",
+        description="Rewrite rotated files dropping corrupt/interrupted "
+                    "debris (intact runs are preserved byte-for-byte) and "
+                    "rebuild the sidecar index.  Only compact an archive "
+                    "with no live writer.")
+    ap.add_argument("directory")
+    ap.add_argument("--prefix", default="traces")
+    args = ap.parse_args(argv)
+    report = compact(args.directory, args.prefix)
+    print(f"[compact] {report.render()}")
+    return 0
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in _SUBCOMMANDS:
+        return {"index": _main_index, "get": _main_get,
+                "compact": _main_compact}[argv[0]](argv[1:])
+    return _main_replay(argv)
 
 
 if __name__ == "__main__":

@@ -34,7 +34,8 @@ import numpy as np
 from repro.core.isa import MachineConfig
 from repro.engine.types import SimRequest
 
-__all__ = ["ArchivedRun", "ArchiveReader", "ReadReport", "request_from_meta"]
+__all__ = ["ArchivedRun", "ArchiveReader", "ReadReport", "parse_run",
+           "request_from_meta"]
 
 
 def _tuplize(value: Any) -> Any:
@@ -132,6 +133,53 @@ class ArchivedRun:
         """The re-runnable request, or ``None`` if not replayable."""
         return request_from_meta(self.meta)
 
+    @property
+    def sm_cell(self) -> int | None:
+        """The (SM, policy) cell this warp belonged to, if any (stamped by
+        :func:`repro.engine.sinks.sm_run_meta` on archived SM-cell warps)."""
+        cell = self.meta.get("sm_cell")
+        return None if cell is None else int(cell)
+
+
+def parse_run(lines: "list[str] | tuple[str, ...]", *, path: str = "",
+              begin_line: int = 0) -> ArchivedRun:
+    """Reassemble one contiguous, well-formed ``begin``/``issue``*/``end``
+    event-line sequence into an :class:`ArchivedRun`.
+
+    This is the random-access counterpart of :meth:`ArchiveReader.__iter__`
+    — :meth:`ArchiveReader.get` reads exactly one indexed run's bytes and
+    decodes them here.  Unlike iteration, damage is *raised* (ValueError):
+    a malformed indexed span means the sidecar index is stale, and the
+    caller should rebuild it rather than silently skip.
+    """
+    events = []
+    for line in lines:
+        line = line.strip()
+        if line:
+            events.append(json.loads(line))
+    if (not events or events[0].get("event") != "begin"
+            or events[-1].get("event") != "end"):
+        raise ValueError("not a whole begin..end run")
+    meta_ev = dict(events[0])
+    meta_ev.pop("event", None)
+    trace = []
+    for ev in events[1:-1]:
+        if ev.get("event") != "issue":
+            raise ValueError(f"unexpected {ev.get('event')!r} event "
+                             f"inside a run")
+        trace.append((int(ev["pc"]), int(ev["mask"])))
+    end = events[-1]
+    return ArchivedRun(
+        meta=_tuplize(meta_ev), trace=tuple(trace),
+        mechanism=str(end.get("mechanism") or ""),
+        status=str(end.get("status") or ""),
+        steps=int(end.get("steps") or 0),
+        fuel_left=int(end.get("fuel_left", -1)),
+        finished=int(end.get("finished") or 0),
+        utilization=float(end.get("utilization") or 0.0),
+        error=end.get("error"),
+        path=path, line=begin_line)
+
 
 @dataclass
 class ReadReport:
@@ -141,6 +189,13 @@ class ReadReport:
     interrupted, orphaned, or corrupt.  A crashed writer leaves exactly a
     ``truncated_tail`` (the partial final line / unfinished final run of
     the last file); anything else indicates a damaged or pre-fix archive.
+
+    ``complete`` records whether the iteration that produced this report
+    *walked the whole archive*: a partial walk (``runs(limit=N)``, or any
+    caller that breaks out of iteration early) leaves the unscanned tail
+    unvalidated, so its counters — and ``clean`` — speak only for the
+    prefix that was read.  Integrity gates must require ``complete``
+    (``python -m repro.archive --expect-zero`` refuses a ``--limit`` walk).
     """
 
     files: tuple[str, ...] = ()
@@ -151,6 +206,7 @@ class ReadReport:
     interrupted_runs: int = 0        # begin without end, *not* at the tail
     orphan_events: int = 0           # issue/end outside a run
     corrupt_lines: int = 0           # undecodable lines not at the tail
+    complete: bool = False           # the walk reached the archive's end
 
     @property
     def clean(self) -> bool:
@@ -179,6 +235,7 @@ class ArchiveReader:
         self.directory = directory
         self.prefix = prefix
         self.report = ReadReport(files=tuple(self.paths()))
+        self._index = None          # cached sidecar index (see get())
 
     def paths(self) -> list[str]:
         """The archive's files, ordered by rotation index."""
@@ -192,12 +249,48 @@ class ArchiveReader:
         return [p for _, p in sorted(found)]
 
     def runs(self, limit: int | None = None) -> list[ArchivedRun]:
+        """The archive's runs, in order (at most ``limit`` of them).
+
+        A limited walk stops mid-iteration, so the resulting ``report``
+        has ``complete == False``: the unscanned tail was never validated
+        and the damage counters speak only for the prefix read.
+        """
         out = []
         for run in self:
             out.append(run)
             if limit is not None and len(out) >= limit:
                 break
         return out
+
+    def get(self, run_id: str) -> ArchivedRun:
+        """Fetch one run by id through the sidecar index — O(1), no scan.
+
+        The index (``{prefix}.index.jsonl``, see :mod:`repro.archive.index`)
+        is loaded on first use and automatically rebuilt when its
+        fingerprint no longer matches the on-disk files (new runs appended,
+        archive compacted).  Raises ``KeyError`` for an unknown id.
+        """
+        from .index import ArchiveIndex       # local: index imports reader
+        idx = self._index
+        if idx is None or not idx.fresh():
+            idx = ArchiveIndex.ensure(self.directory, prefix=self.prefix)
+            self._index = idx
+        entry = idx.lookup(run_id)
+        path = os.path.join(self.directory, entry.file)
+        with open(path, "rb") as fh:
+            fh.seek(entry.offset)
+            data = fh.read(entry.length)
+        try:
+            return parse_run(data.decode("utf-8").splitlines(), path=path,
+                             begin_line=entry.line)
+        except (ValueError, KeyError, TypeError) as exc:
+            # the fingerprint matched but the span no longer parses: the
+            # file was mutated in place (same size).  Distinct from an
+            # unknown id — surface it as corruption, not a lookup miss
+            raise ValueError(
+                f"indexed span for {run_id!r} at {entry.file}:"
+                f"{entry.offset} no longer parses ({exc}); the archive "
+                f"was modified in place — rebuild the index") from exc
 
     def __iter__(self) -> Iterator[ArchivedRun]:
         paths = self.paths()
@@ -281,3 +374,6 @@ class ArchiveReader:
                     report.truncated_runs += 1
                 else:
                     report.interrupted_runs += 1
+        # only a walk that reaches this point validated the whole archive;
+        # a consumer that breaks early (runs(limit=N)) leaves it False
+        report.complete = True

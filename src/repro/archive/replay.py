@@ -25,8 +25,10 @@ million-warp archives tractable.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from dataclasses import dataclass
-from typing import Any, Iterable
+from typing import Any, Callable, Iterable
 
 import numpy as np
 
@@ -55,6 +57,10 @@ class ReplayRow:
     replayed_trace_len: int
     archived_status: str
     replayed_status: str
+    # SM-cell coordinates (sm_run_meta archives); None for single-warp runs
+    sm_cell: int | None = None
+    sm_warp: int | None = None
+    sm_policy: str | None = None
 
     @property
     def discrepancy_pct(self) -> float:
@@ -64,6 +70,13 @@ class ReplayRow:
     def pair(self) -> str:
         """Breakdown key: replayed mechanism vs the archived reference."""
         return f"{self.replay_mechanism} vs {self.archived_mechanism}"
+
+    @property
+    def cell_key(self) -> str | None:
+        """Breakdown key grouping this warp back into its SM cell."""
+        if self.sm_cell is None:
+            return None
+        return f"cell{self.sm_cell} ({self.sm_policy or '?'})"
 
 
 @dataclass(frozen=True)
@@ -139,6 +152,24 @@ class ReplayReport:
     def by_program(self) -> dict[str, Aggregate]:
         return self._slices(lambda r: r.program or "<anonymous>")
 
+    def _sm_rows(self) -> list[ReplayRow]:
+        return [r for r in self.rows if r.sm_cell is not None]
+
+    def by_sm_cell(self) -> dict[str, Aggregate]:
+        """Archived SM-cell warps grouped back into their cells (empty for
+        archives with no SM-cell runs)."""
+        groups: dict[str, list[float]] = {}
+        for r in self._sm_rows():
+            groups.setdefault(r.cell_key, []).append(r.discrepancy)
+        return {k: Aggregate.of(v) for k, v in sorted(groups.items())}
+
+    def by_sm_policy(self) -> dict[str, Aggregate]:
+        """Per SM warp-scheduler policy, over the SM-cell warps only."""
+        groups: dict[str, list[float]] = {}
+        for r in self._sm_rows():
+            groups.setdefault(r.sm_policy or "?", []).append(r.discrepancy)
+        return {k: Aggregate.of(v) for k, v in sorted(groups.items())}
+
     def render(self) -> str:
         """Human-readable report (the CLI surface prints exactly this)."""
         out = []
@@ -150,6 +181,8 @@ class ReplayReport:
                       f"interrupted={rd.interrupted_runs} "
                       f"orphans={rd.orphan_events} "
                       f"corrupt={rd.corrupt_lines}")
+            if not rd.complete:
+                health += ", partial walk"
             out.append(f"[archive] {len(rd.files)} file(s), {rd.runs} "
                        f"run(s) read ({health})")
         skips = (f"skipped: {self.skipped_unreplayable} unreplayable, "
@@ -172,6 +205,18 @@ class ReplayReport:
                 width = max(len(k) for k in by_prog)
                 for k, agg in by_prog.items():
                     out.append(f"    {k:<{width}}  {agg.render()}")
+            by_cell = self.by_sm_cell()
+            if by_cell:
+                out.append("[replay] by SM cell:")
+                width = max(len(k) for k in by_cell)
+                for k, agg in by_cell.items():
+                    out.append(f"    {k:<{width}}  {agg.render()}")
+                by_pol = self.by_sm_policy()
+                if by_pol:
+                    out.append("[replay] by SM policy:")
+                    width = max(len(k) for k in by_pol)
+                    for k, agg in by_pol.items():
+                        out.append(f"    {k:<{width}}  {agg.render()}")
         return "\n".join(out)
 
 
@@ -253,6 +298,7 @@ class Replayer:
                 archived = trace_tokens(list(run.trace))
                 replayed = trace_tokens(list(res.trace))
                 dist = int(levenshtein(replayed, archived))
+                sm_warp = run.meta.get("sm_warp")
                 rows.append(ReplayRow(
                     index=idx, program=run.program or req.name,
                     archived_mechanism=run.mechanism,
@@ -262,7 +308,11 @@ class Replayer:
                     archived_trace_len=len(archived),
                     replayed_trace_len=len(replayed),
                     archived_status=run.status,
-                    replayed_status=res.status.value))
+                    replayed_status=res.status.value,
+                    sm_cell=run.sm_cell,
+                    sm_warp=None if sm_warp is None else int(sm_warp),
+                    sm_policy=(None if run.sm_cell is None
+                               else str(run.meta.get("sm_policy") or ""))))
         rows.sort(key=lambda r: r.index)
         return ReplayReport(rows=tuple(rows),
                             skipped_unreplayable=skipped_unreplayable,
@@ -270,3 +320,63 @@ class Replayer:
                             skipped_unknown_mechanism=skipped_unknown,
                             read=reader.report if reader is not None
                             else None)
+
+    def watch(self, source: "str | ArchiveReader", *,
+              poll_s: float = 0.25,
+              idle_timeout_s: float | None = None,
+              max_runs: int | None = None,
+              progress: "Callable[[ReplayReport, int], None] | None" = None,
+              ) -> ReplayReport:
+        """Tail a growing archive, replaying runs as they are appended.
+
+        Re-walks ``source`` every ``poll_s`` seconds (``ArchiveReader``
+        iteration is re-entrant over a still-growing directory), replays
+        only the runs not yet seen, and calls ``progress(report, n_new)``
+        with the *rolling cumulative* :class:`ReplayReport` after each
+        batch of new runs — the live Fig 9 aggregate of everything
+        replayed so far.
+
+        Returns the final report when ``max_runs`` archived runs have been
+        processed (replayed or skipped), or when no new runs have appeared
+        for ``idle_timeout_s`` seconds.  With neither bound the watch runs
+        until interrupted.  Truncated-tail debris at the end of the live
+        file is tolerated per poll exactly as in a one-shot read — a run
+        the writer has not finished flushing is simply not yielded yet.
+        """
+        reader = (ArchiveReader(source) if isinstance(source, str)
+                  else source)
+        rows: list[ReplayRow] = []
+        skipped = {"unreplayable": 0, "untraced": 0, "unknown": 0}
+        seen = 0
+        last_new = time.monotonic()
+
+        def rolling() -> ReplayReport:
+            return ReplayReport(
+                rows=tuple(rows),
+                skipped_unreplayable=skipped["unreplayable"],
+                skipped_untraced=skipped["untraced"],
+                skipped_unknown_mechanism=skipped["unknown"],
+                read=reader.report)
+
+        while True:
+            new = reader.runs()[seen:]
+            if max_runs is not None:
+                new = new[:max(0, max_runs - seen)]
+            if new:
+                part = self.replay(new)
+                rows.extend(dataclasses.replace(r, index=r.index + seen)
+                            for r in part.rows)
+                skipped["unreplayable"] += part.skipped_unreplayable
+                skipped["untraced"] += part.skipped_untraced
+                skipped["unknown"] += part.skipped_unknown_mechanism
+                seen += len(new)
+                last_new = time.monotonic()
+                if progress is not None:
+                    progress(rolling(), len(new))
+            if max_runs is not None and seen >= max_runs:
+                break
+            if (idle_timeout_s is not None
+                    and time.monotonic() - last_new >= idle_timeout_s):
+                break
+            time.sleep(poll_s)
+        return rolling()

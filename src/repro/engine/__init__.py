@@ -72,7 +72,8 @@ from .registry import (Mechanism, available_mechanisms, get_mechanism,
                        iter_mechanisms, register_mechanism,
                        unregister_mechanism)
 from .sinks import (JsonlSink, MemorySink, RingBufferSink, RotatingJsonlSink,
-                    TraceSink, feed_result, replay_payload, run_meta)
+                    TraceSink, feed_result, replay_payload, run_meta,
+                    sm_run_meta)
 from .types import (SimRequest, SimResult, SimStatus, SmResult,
                     classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
@@ -85,5 +86,6 @@ __all__ = [
     "SimResult", "SimStatus", "SmResult", "Simulator", "TraceSink",
     "as_request", "available_mechanisms", "classify_status", "feed_result",
     "get_mechanism", "iter_mechanisms", "register_mechanism",
-    "replay_payload", "run_meta", "unregister_mechanism", "worst_status",
+    "replay_payload", "run_meta", "sm_run_meta", "unregister_mechanism",
+    "worst_status",
 ]

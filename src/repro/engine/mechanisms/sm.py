@@ -92,7 +92,18 @@ def build_sm_result(reqs: Sequence[SimRequest],
         status=worst_status([r.status for r in results]),
         steps=steps, cycles=cycles, thread_instructions=tinstr,
         utilization=tinstr / max(1, steps * width),
+        requests=tuple(reqs),
         wall_time_s=wall_time_s)
+
+
+def warp_count(programs, n_warps: "int | None") -> int:
+    """Cell width for ``run_sm``/``submit_sm`` arguments — the ONE
+    derivation both the façade and the service's warp-level stats use:
+    one warp per entry of a program sequence, else ``n_warps``
+    (default :data:`DEFAULT_WARPS`)."""
+    if isinstance(programs, (list, tuple)):
+        return len(programs)
+    return DEFAULT_WARPS if n_warps is None else int(n_warps)
 
 
 def _sm_options(req: SimRequest) -> tuple[int, str, str]:
@@ -137,4 +148,4 @@ def _run_sm_interleave(req: SimRequest) -> SimResult:
 
 
 __all__ = ["SM_POLICIES", "DEFAULT_WARPS", "DEFAULT_INNER", "DEFAULT_POLICY",
-           "interleave_traces", "build_sm_result"]
+           "interleave_traces", "build_sm_result", "warp_count"]

@@ -22,7 +22,8 @@ from repro.core.timing import TimingConfig, ipc_delta, simulate
 from repro.core.trace import discrepancy
 
 from .registry import Mechanism, get_mechanism
-from .sinks import TraceSink, feed_result, run_meta
+from .sinks import (TraceSink, feed_result, next_sm_cell_id, run_meta,
+                    sm_run_meta)
 from .types import SimRequest, SimResult, SmResult
 
 ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
@@ -203,8 +204,14 @@ class Simulator:
         per-warp traces are time-multiplexed through the SM issue scheduler
         under ``policy`` (``round_robin`` / ``greedy_then_oldest``).  The
         returned :class:`~repro.engine.types.SmResult` carries the per-warp
-        ``SimResult``s plus the interleaved ``(warp, pc, mask)`` SM trace
-        and its latency-aware cycle count.
+        ``SimResult``s (and their ``SimRequest``s) plus the interleaved
+        ``(warp, pc, mask)`` SM trace and its latency-aware cycle count.
+
+        A sink receives each warp as one normalized run whose begin event
+        is the SM variant of the replay meta
+        (:func:`~repro.engine.sinks.sm_run_meta`: warp index, cell width,
+        policy, cell id, full replay payload) — SM-cell archives replay
+        offline exactly like single-warp ones.
         """
         from .mechanisms.sm import build_sm_result
         if inner is None:
@@ -216,6 +223,7 @@ class Simulator:
             if inner_name == "sm_interleave":
                 raise ValueError("inner must be a single-warp mechanism, "
                                  "not sm_interleave itself")
+        from .mechanisms.sm import warp_count
         if isinstance(programs, (list, tuple)):
             if n_warps is not None and n_warps != len(programs):
                 raise ValueError(
@@ -223,16 +231,30 @@ class Simulator:
                     f"per-warp programs")
             per_warp = list(programs)
         else:
-            per_warp = [programs] * (4 if n_warps is None else int(n_warps))
+            per_warp = [programs] * warp_count(programs, n_warps)
         if not per_warp:
             raise ValueError("run_sm needs at least one warp")
         reqs = [as_request(p, cfg, **request_kw) for p in per_warp]
+        # dispatch through the shared planner (the run_batch path) but feed
+        # the sink ourselves: warps of an SM cell archive under sm_run_meta,
+        # not the plain single-warp run_meta run_batch would stamp
+        from repro.service.planner import execute_plan   # lazy: no cycle
+        mech = get_mechanism(inner_name)
         t0 = time.perf_counter()
-        results = self.run_batch(reqs, mechanism=inner_name, sink=sink)
+        results = execute_plan(mech, reqs, max_workers=self._max_workers)
         wall = time.perf_counter() - t0
-        return build_sm_result(reqs, results, inner=inner_name,
-                               policy=policy, timing_cfg=timing_cfg,
-                               wall_time_s=wall)
+        sm = build_sm_result(reqs, results, inner=inner_name,
+                             policy=policy, timing_cfg=timing_cfg,
+                             wall_time_s=wall)
+        out_sink = sink or self._sink
+        if out_sink is not None:
+            cell = next_sm_cell_id()
+            for w, (req, res) in enumerate(zip(reqs, results)):
+                feed_result(out_sink, res,
+                            sm_run_meta(inner_name, req, warp=w,
+                                        n_warps=len(reqs), policy=policy,
+                                        cell=cell))
+        return sm
 
     # -- mechanism comparison (the paper's evaluation as an API) ------------
 

@@ -28,6 +28,7 @@ Simulator façade and the simulation service both use.
 from __future__ import annotations
 
 import codecs
+import itertools
 import json
 import os
 import queue
@@ -177,6 +178,36 @@ def run_meta(mechanism: str, req: SimRequest) -> dict[str, Any]:
             "n_threads": req.resolved_cfg().n_threads,
             "program_len": int(np.asarray(req.program).shape[0]),
             "replay": replay_payload(req)}
+
+
+# Per-process SM-cell ids: every archived warp of one run_sm/submit_sm cell
+# carries the same ``sm_cell`` so offline tooling can group the warps back
+# into the cell they executed in.  itertools.count().__next__ is atomic
+# under the GIL, so concurrent service workers never share an id.
+_sm_cell_ids = itertools.count()
+
+
+def next_sm_cell_id() -> int:
+    """A process-unique id for one (SM, policy) cell's archived warps."""
+    return next(_sm_cell_ids)
+
+
+def sm_run_meta(inner: str, req: SimRequest, *, warp: int, n_warps: int,
+                policy: str, cell: int) -> dict[str, Any]:
+    """The canonical begin-event meta for one warp of an SM cell.
+
+    The SM variant of :func:`run_meta`: the same replayable payload (the
+    warp re-runs standalone under ``inner`` — warps are architecturally
+    independent, so a standalone replay is bit-equal to its in-cell
+    execution) plus the cell coordinates — ``sm_warp`` (index within the
+    cell), ``sm_warps`` (cell width), ``sm_policy`` (issue scheduler) and
+    ``sm_cell`` (grouping id) — so :class:`repro.archive.Replayer` can
+    reassemble per-cell and per-policy discrepancy breakdowns.
+    """
+    meta = run_meta(inner, req)
+    meta.update({"sm_warp": int(warp), "sm_warps": int(n_warps),
+                 "sm_policy": str(policy), "sm_cell": int(cell)})
+    return meta
 
 
 class JsonlSink(TraceSink):

@@ -158,8 +158,12 @@ class SmResult:
     so the per-warp architectural results come straight from the inner
     mechanism while the SM-level schedule — ``sm_trace`` of
     ``(warp, pc, mask)`` slots and the latency-aware ``cycles`` — reflects
-    the interleaving.  ``eq=False`` for the same identity-comparison reason
-    as :class:`SimResult`.
+    the interleaving.  ``requests`` keeps the per-warp
+    :class:`SimRequest`s the cell executed (``requests[w]`` produced
+    ``warps[w]``) so SM cells archive replayably: the service and the
+    façade stamp each warp's begin event with the full replay payload via
+    :func:`repro.engine.sinks.sm_run_meta`.  ``eq=False`` for the same
+    identity-comparison reason as :class:`SimResult`.
     """
 
     mechanism: str
@@ -172,6 +176,7 @@ class SmResult:
     cycles: int                       # latency-aware schedule length
     thread_instructions: int          # sum of active-mask popcounts
     utilization: float                # SIMD utilization over the SM trace
+    requests: tuple[SimRequest, ...] = ()   # per-warp requests (replay)
     wall_time_s: float = 0.0
     meta: Mapping[str, Any] = field(default_factory=dict)
 

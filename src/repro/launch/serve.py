@@ -16,7 +16,9 @@ service metrics (queue depth, latency percentiles, warps/s, batch fill).
 ``--mode replay`` is the offline half of archival: read a
 ``RotatingJsonlSink`` archive back (``repro.archive``), re-run every
 replayable request, and report the trace-discrepancy aggregate — the
-paper's Fig 9 from the durable archive instead of a live run.
+paper's Fig 9 from the durable archive instead of a live run.  With
+``--watch`` the replay tails a *growing* archive: new runs appended by a
+live service are picked up each poll and folded into a rolling aggregate.
 
 Usage:
   python -m repro.launch.serve --arch rwkv6-3b --batch 4 --prompt-len 16 \\
@@ -32,6 +34,8 @@ Usage:
       --archive-dir sim-archive
   python -m repro.launch.serve --mode replay --archive-dir sim-archive \\
       --replay-mechanism turing_oracle
+  python -m repro.launch.serve --mode replay --archive-dir sim-archive \\
+      --watch --watch-idle-s 30
 """
 from __future__ import annotations
 
@@ -200,7 +204,22 @@ def _replay_main(args) -> None:
     reader = ArchiveReader(args.archive_dir, prefix=args.archive_prefix)
     replayer = Replayer(args.replay_mechanism or None)
     t0 = time.time()
-    report = replayer.replay(reader, limit=args.limit or None)
+    if args.watch:
+        # streaming replay: tail the (possibly still-growing) archive,
+        # folding each batch of newly appended runs into a rolling
+        # aggregate until --limit runs arrive or the archive goes idle
+        def progress(report, n_new):
+            agg = report.overall()
+            rolling = agg.render() if report.rows else "n=0"
+            print(f"[serve:replay] +{n_new} run(s) -> "
+                  f"{report.replayed} replayed; rolling {rolling}",
+                  flush=True)
+        report = replayer.watch(
+            reader, poll_s=args.watch_poll_ms / 1000.0,
+            idle_timeout_s=args.watch_idle_s or None,
+            max_runs=args.limit or None, progress=progress)
+    else:
+        report = replayer.replay(reader, limit=args.limit or None)
     dt = time.time() - t0
     print(report.render())
     print(f"[serve:replay] {report.replayed} run(s) in {dt:.3f}s "
@@ -248,7 +267,17 @@ def main():
                          "each run's archived mechanism — the self-replay "
                          "integrity check)")
     ap.add_argument("--limit", type=int, default=0,
-                    help="[replay] replay at most N runs (0 = all)")
+                    help="[replay] replay at most N runs (0 = all; with "
+                         "--watch, stop after N runs)")
+    ap.add_argument("--watch", action="store_true",
+                    help="[replay] streaming mode: tail a growing archive "
+                         "and replay newly appended runs incrementally "
+                         "with a rolling aggregate")
+    ap.add_argument("--watch-poll-ms", type=float, default=250.0,
+                    help="[replay] --watch poll interval (ms)")
+    ap.add_argument("--watch-idle-s", type=float, default=0.0,
+                    help="[replay] exit --watch after this long with no "
+                         "new runs (0 = watch until --limit/interrupt)")
     args = ap.parse_args()
     if args.mode == "sim":
         _sim_main(args)

@@ -52,7 +52,8 @@ from repro.core.timing import TimingConfig
 from repro.core.trace import nearest_rank
 from repro.engine.registry import get_mechanism
 from repro.engine.simulator import ProgramLike, Simulator, as_request
-from repro.engine.sinks import TraceSink, feed_result, run_meta
+from repro.engine.sinks import (TraceSink, feed_result, next_sm_cell_id,
+                                run_meta, sm_run_meta)
 from repro.engine.types import SimRequest, SimResult, SmResult
 
 from .coalescer import BatchCoalescer, FlushedGroup
@@ -92,9 +93,13 @@ class ServiceStats:
 
     Latency percentiles cover admission -> resolution for the most recent
     requests (bounded window); ``warps_per_s`` is completed warp requests
-    over service uptime.  ``batch_fill`` is the coalescing histogram:
-    ``(batch_size, count)`` pairs, ascending — a service soaking enough
-    homogeneous traffic shows mass at ``max_batch``.
+    over service uptime.  ``submitted`` / ``completed`` / ``failed`` count
+    *warps*: an (SM, policy) cell contributes one warp per member — so
+    ``warps_per_s`` measures real SM traffic, not cells — while its cell
+    latency is recorded once and ``sm_jobs`` counts the cell.
+    ``batch_fill`` is the coalescing histogram: ``(batch_size, count)``
+    pairs, ascending — a service soaking enough homogeneous traffic shows
+    mass at ``max_batch``.
     """
 
     uptime_s: float
@@ -136,6 +141,7 @@ class _SmJob:
     programs: Any
     cfg: MachineConfig | None
     kwargs: dict
+    warps: int = 1      # cell width, counted into the warp-level stats
 
 
 class SimulationService:
@@ -223,23 +229,33 @@ class SimulationService:
             self._threads.append(w)
         return self
 
-    def stop(self, *, timeout: float = 30.0) -> None:
-        """Flush all pending work, drain it, and join the threads."""
+    def stop(self, *, timeout: float = 30.0) -> list[str]:
+        """Flush all pending work, drain it, and join the threads.
+
+        ``timeout`` is ONE shared deadline across every join — not a
+        per-thread budget (which would make the worst-case shutdown
+        ``(workers + 1) x timeout``).  Returns the names of threads still
+        alive when the deadline expired (empty list = clean shutdown; the
+        stragglers are daemons, so the process can still exit).
+        """
         with self._admission_lock:
             with self._lock:
                 if not self._started:
-                    return
+                    return []
                 self._stopping = True
         self.flush()
         self._dispatch.join()                     # drain in-flight jobs
         for _ in range(self._n_workers):
             self._dispatch.put(_SENTINEL)
         self._flusher_wake.set()
+        deadline = time.monotonic() + timeout
         for t in self._threads:
-            t.join(timeout=timeout)
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+        stragglers = [t.name for t in self._threads if t.is_alive()]
         self._threads.clear()
         with self._lock:
             self._started = False
+        return stragglers
 
     def __enter__(self) -> "SimulationService":
         return self.start()
@@ -289,16 +305,24 @@ class SimulationService:
                   **request_kw) -> SimTicket:
         """Admit one (SM, policy) cell — executed as a single sharded
         ``Simulator.run_sm`` call on the worker pool, bypassing the
-        coalescer (an SM cell is already a batch of warps)."""
+        coalescer (an SM cell is already a batch of warps).
+
+        Stats count the cell's *warps* into ``submitted`` / ``completed``
+        (``warps_per_s`` measures SM traffic, not cells); ``sm_jobs`` and
+        the latency window record the cell once.
+        """
+        from repro.engine.mechanisms.sm import warp_count
+        warps = warp_count(programs, n_warps)
         ticket = SimTicket()
         job = _SmJob(ticket=ticket, programs=programs, cfg=cfg,
                      kwargs=dict(n_warps=n_warps, inner=inner, policy=policy,
-                                 timing_cfg=timing_cfg, **request_kw))
+                                 timing_cfg=timing_cfg, **request_kw),
+                     warps=max(1, warps))
         with self._admission_lock:
             self._ensure_started()
             with self._lock:
-                self._stats["submitted"] += 1
-                self._stats["inflight"] += 1
+                self._stats["submitted"] += job.warps
+                self._stats["inflight"] += job.warps
             self._dispatch.put(job)
         return ticket
 
@@ -444,20 +468,25 @@ class SimulationService:
             sm = self._sim.run_sm(job.programs, job.cfg, **job.kwargs)
         except Exception as exc:
             with self._lock:
-                self._stats["failed"] += 1
-                self._stats["inflight"] -= 1
+                self._stats["failed"] += job.warps
+                self._stats["inflight"] -= job.warps
             job.ticket._future.set_exception(exc)
             return
         now = time.monotonic()
-        for w, warp_res in enumerate(sm.warps):
+        # archive each warp through the same replayable meta builder the
+        # façade uses (sm_run_meta: replay payload + cell coordinates) —
+        # a service-archived SM cell replays bit-equal to a live run
+        cell = next_sm_cell_id()
+        for w, (warp_req, warp_res) in enumerate(zip(sm.requests, sm.warps)):
             self._archive_result(
                 warp_res, sm.inner,
-                meta={"mechanism": sm.inner, "program": f"sm/w{w}",
-                      "sm_policy": sm.policy, "sm_warps": sm.n_warps})
+                meta=sm_run_meta(sm.inner, warp_req, warp=w,
+                                 n_warps=sm.n_warps, policy=sm.policy,
+                                 cell=cell))
         job.ticket._future.set_result(sm)
         with self._lock:
-            self._stats["completed"] += 1
-            self._stats["inflight"] -= 1
+            self._stats["completed"] += job.warps
+            self._stats["inflight"] -= job.warps
             self._stats["sm_jobs"] += 1
             self._latencies.append(now - job.ticket.submitted_at)
 

@@ -14,12 +14,15 @@ Acceptance contract (ISSUE 4):
 """
 import json
 import os
+import threading
+import time
 
 import numpy as np
 import pytest
 
-from repro.archive import (ArchiveReader, Replayer, ReplayReport,
-                           nearest_rank, request_from_meta)
+from repro.archive import (ArchiveIndex, ArchiveReader, Replayer,
+                           ReplayReport, compact, nearest_rank,
+                           request_from_meta)
 from repro.archive.replay import Aggregate
 from repro.core import MachineConfig
 from repro.core.programs import make_suite
@@ -280,7 +283,10 @@ def test_unreplayable_and_untraced_runs_are_counted(tmp_path):
     assert report.rows[0].discrepancy == 0.0
 
 
-def test_sm_cell_archives_read_but_skip_replay(tmp_path):
+def test_sm_cell_archives_are_replayable(tmp_path):
+    """ISSUE 5 tentpole: service-archived SM-cell warps carry the full
+    replay payload + cell coordinates (sm_run_meta) — the PR 4 read path
+    used to see them as hand-built, unreplayable meta."""
     sink = RotatingJsonlSink(str(tmp_path))
     with SimulationService(default_mechanism="hanoi", workers=1,
                            archive=sink) as svc:
@@ -291,11 +297,18 @@ def test_sm_cell_archives_read_but_skip_replay(tmp_path):
     reader = ArchiveReader(str(tmp_path))
     runs = reader.runs()
     assert len(runs) == sm.n_warps == 3
-    assert all(not r.replayable for r in runs)
+    assert all(r.replayable for r in runs)
     assert all(r.meta["sm_policy"] == "round_robin" for r in runs)
+    assert [r.meta["sm_warp"] for r in runs] == [0, 1, 2]
+    assert len({r.sm_cell for r in runs}) == 1       # one cell id
+    # archived warp == the warp's SimResult from the live cell, bit-equal
+    for run, warp in zip(runs, sm.warps):
+        assert run.trace == warp.trace
+        assert run.status == warp.status.value
     report = Replayer().replay(reader)
-    assert report.replayed == 0
-    assert report.skipped_unreplayable == 3
+    assert report.replayed == 3
+    assert report.skipped_unreplayable == 0
+    assert all(r.discrepancy == 0.0 for r in report.rows)
 
 
 # ---------------------------------------------------------------------------
@@ -420,3 +433,324 @@ def _as_archived(meta, res):
                        finished=int(res.finished),
                        utilization=res.utilization, error=res.error,
                        path="<memory>", line=1)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5 tentpole acceptance: service-archived SM cells over a rotated
+# archive — >= 2 policies, heterogeneous per-warp programs, every
+# single-warp mechanism — replay to exactly 0.0 and group back into cells
+# ---------------------------------------------------------------------------
+
+def _write_sm_grid_archive(tmp_path, inners, policies, *, max_bytes=4096):
+    progs = [_bench(n) for n in BENCH_NAMES]         # heterogeneous warps
+    sink = RotatingJsonlSink(str(tmp_path), max_bytes=max_bytes)
+    cells = [dict(programs=progs, cfg=CFG, inner=m, policy=p)
+             for m in inners for p in policies]
+    with SimulationService(default_mechanism="hanoi", workers=2,
+                           archive=sink) as svc:
+        grid = svc.run_sm_grid(cells, timeout=600)
+    sink.flush()
+    sink.close()
+    return sink, cells, grid
+
+
+def test_sm_round_trip_every_mechanism(tmp_path):
+    inners = [m.name for m in iter_mechanisms() if m.name != "sm_interleave"]
+    policies = ("round_robin", "greedy_then_oldest")
+    sink, cells, grid = _write_sm_grid_archive(tmp_path, inners, policies)
+    assert len(sink.paths) >= 2                      # rotated archive
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    assert len(runs) == sink.runs_written == len(cells) * len(BENCH_NAMES)
+    assert all(r.replayable for r in runs)
+
+    report = Replayer().replay(reader)
+    assert report.replayed == len(runs)
+    assert all(r.discrepancy == 0.0 for r in report.rows)   # self-replay
+    assert all(r.replayed_status == r.archived_status for r in report.rows)
+    # warps group back into their cells and policies
+    by_cell = report.by_sm_cell()
+    assert len(by_cell) == len(cells)
+    assert all(agg.count == len(BENCH_NAMES) for agg in by_cell.values())
+    by_policy = report.by_sm_policy()
+    assert set(by_policy) == set(policies)
+    assert all(agg.count == len(inners) * len(BENCH_NAMES)
+               for agg in by_policy.values())
+    assert "by SM cell:" in report.render()
+    # every inner mechanism's warps made it into the archive
+    assert {r.meta["mechanism"] for r in runs} == set(inners)
+
+    # bit-equality with live execution: the archived warp trace equals a
+    # fresh standalone run of the reconstructed request (what
+    # Simulator.compare would diff against)
+    for run in runs:
+        if run.meta["mechanism"] in ("hanoi", "turing_oracle"):
+            live = SIM.run(run.request(), mechanism=run.meta["mechanism"])
+            assert run.trace == live.trace
+
+
+def test_facade_run_sm_sink_matches_service_archive(tmp_path):
+    """Simulator.run_sm with a sink stamps the same SM variant meta the
+    service path writes — one builder, no fork."""
+    sink = RotatingJsonlSink(str(tmp_path))
+    sm = Simulator("hanoi", sink=sink).run_sm(
+        [_bench("DIAMOND"), _bench("HOTS0")], CFG, inner="hanoi",
+        policy="greedy_then_oldest")
+    sink.flush()
+    sink.close()
+    runs = ArchiveReader(str(tmp_path)).runs()
+    assert len(runs) == sm.n_warps == 2
+    assert len(sm.requests) == 2                     # requests kept on SmResult
+    for w, run in enumerate(runs):
+        assert run.replayable
+        assert run.meta["sm_warp"] == w
+        assert run.meta["sm_warps"] == 2
+        assert run.meta["sm_policy"] == "greedy_then_oldest"
+        assert run.trace == sm.warps[w].trace
+    report = Replayer().replay(runs)
+    assert report.replayed == 2
+    assert report.mean_discrepancy() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sidecar index: O(1) get, rebuild-on-mismatch, compaction
+# ---------------------------------------------------------------------------
+
+def test_index_get_bit_equal_to_sequential(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi", "simt_stack"])
+    reader = ArchiveReader(str(tmp_path))
+    seq = reader.runs()
+    idx = ArchiveIndex.build(str(tmp_path))
+    assert os.path.exists(idx.path)
+    assert len(idx) == len(seq) == sink.runs_written
+    for entry, run in zip(idx.entries, seq):
+        got = reader.get(entry.run_id)
+        assert dict(got.meta) == dict(run.meta)      # bit-equal runs
+        assert got.trace == run.trace
+        assert (got.mechanism, got.status, got.steps, got.fuel_left) == \
+            (run.mechanism, run.status, run.steps, run.fuel_left)
+        assert entry.program == run.program
+        assert entry.mechanism == run.meta["mechanism"]
+    with pytest.raises(KeyError, match="unknown run id"):
+        reader.get("run-999999")
+
+
+def test_index_loads_without_rescan_and_rebuilds_on_mismatch(tmp_path):
+    _write_archive(tmp_path, ["hanoi"])
+    built = ArchiveIndex.build(str(tmp_path))
+    loaded = ArchiveIndex.load(str(tmp_path))
+    assert loaded is not None and loaded.fresh()
+    assert loaded.entries == built.entries
+    assert ArchiveIndex.ensure(str(tmp_path)).entries == built.entries
+
+    # grow the archive behind the index's back: a new rotated file
+    from repro.engine import JsonlSink
+    res = SIM.run(_bench("DIAMOND"), CFG)
+    extra = JsonlSink(str(tmp_path / "traces-00099.jsonl"))
+    feed_result(extra, res, run_meta("hanoi", as_request(_bench("DIAMOND"),
+                                                         CFG)))
+    extra.close()
+    assert not loaded.fresh()                        # fingerprint mismatch
+    reader = ArchiveReader(str(tmp_path))
+    rebuilt_id = f"run-{len(built.entries):06d}"
+    got = reader.get(rebuilt_id)                     # transparent rebuild
+    assert got.program == "DIAMOND"
+    assert reader._index is not None and reader._index.fresh()
+
+    # a corrupt sidecar is treated as missing, never fatal
+    with open(ArchiveIndex.ensure(str(tmp_path)).path, "w") as fh:
+        fh.write("not an index\n")
+    assert ArchiveIndex.load(str(tmp_path)) is None
+    assert len(ArchiveIndex.ensure(str(tmp_path))) == len(built.entries) + 1
+
+
+def test_compact_drops_debris_preserves_runs_bit_equal(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi", "simt_stack"])
+    # damage: corrupt one mid-archive issue line + truncate the tail
+    first, last = sink.paths[0], sink.paths[-1]
+    lines = open(first, encoding="utf-8").read().splitlines(keepends=True)
+    lines[1] = "{not json}\n"
+    open(first, "w", encoding="utf-8").writelines(lines)
+    raw = open(last, encoding="utf-8").read()
+    open(last, "w", encoding="utf-8").write(raw[:-20])
+
+    reader = ArchiveReader(str(tmp_path))
+    before = reader.runs()
+    assert not reader.report.clean
+    assert len(before) == sink.runs_written - 2      # two runs damaged
+
+    report = compact(str(tmp_path))
+    assert report.runs_kept == len(before)
+    assert report.bytes_dropped > 0
+    after_reader = ArchiveReader(str(tmp_path))
+    after = after_reader.runs()
+    assert after_reader.report.clean                 # debris gone
+    assert len(after) == len(before)
+    for a, b in zip(after, before):                  # byte-for-byte fidelity
+        assert dict(a.meta) == dict(b.meta)
+        assert a.trace == b.trace and a.status == b.status
+
+    # the index was rebuilt by compaction: get() is bit-equal again
+    idx = ArchiveIndex.load(str(tmp_path))
+    assert idx is not None and idx.fresh() and len(idx) == len(after)
+    got = after_reader.get(idx.entries[-1].run_id)
+    assert got.trace == after[-1].trace
+    # self-replay still exact over the compacted archive
+    assert Replayer().replay(after_reader).mean_discrepancy() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# partial walks: ReadReport.complete + the --expect-zero gate
+# ---------------------------------------------------------------------------
+
+def test_partial_walk_is_flagged_incomplete(tmp_path):
+    sink = _write_archive(tmp_path, ["hanoi"])
+    reader = ArchiveReader(str(tmp_path))
+    reader.runs()
+    assert reader.report.complete                    # full walk
+    reader.runs(limit=1)
+    assert not reader.report.complete                # broke mid-iteration
+    assert reader.report.clean                       # ...which is why clean
+    # alone must not be trusted: damage the unscanned tail and a limited
+    # walk still reports clean
+    raw = open(sink.paths[-1], encoding="utf-8").read()
+    open(sink.paths[-1], "w", encoding="utf-8").write(raw[:-20])
+    reader.runs(limit=1)
+    assert reader.report.clean and not reader.report.complete
+    reader.runs()
+    assert not reader.report.clean                   # the full walk sees it
+
+
+def test_cli_expect_zero_refuses_partial_walk(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    _write_archive(tmp_path, ["hanoi"])
+    assert main([str(tmp_path), "--expect-zero"]) == 0
+    assert main([str(tmp_path), "--limit", "1", "--expect-zero"]) == 1
+    assert "partial walk" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# CLI subcommands: index / get / compact
+# ---------------------------------------------------------------------------
+
+def test_cli_index_get_compact(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    _write_archive(tmp_path, ["hanoi"])
+    assert main(["index", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert f"{len(BENCH_NAMES)} run(s)" in out and "run-000000" in out
+
+    assert main(["get", str(tmp_path), "run-000000"]) == 0
+    out = capsys.readouterr().out
+    assert "replayable=True" in out and "mechanism=hanoi" in out
+
+    assert main(["get", str(tmp_path), "run-000000", "--json"]) == 0
+    obj = json.loads(capsys.readouterr().out)
+    assert obj["id"] == "run-000000" and obj["status"] == "ok"
+    assert obj["trace"] and "replay" in obj["meta"]
+
+    assert main(["get", str(tmp_path), "run-4242"]) == 1
+    assert "unknown run id" in capsys.readouterr().err
+
+    assert main(["compact", str(tmp_path)]) == 0
+    assert "kept" in capsys.readouterr().out
+    assert main([str(tmp_path), "--expect-zero"]) == 0   # still replays clean
+
+
+# ---------------------------------------------------------------------------
+# --watch: streaming replay of a growing archive
+# ---------------------------------------------------------------------------
+
+def test_watch_picks_up_appended_runs(tmp_path):
+    res = SIM.run(_bench("DIAMOND"), CFG)
+    meta = run_meta("hanoi", as_request(_bench("DIAMOND"), CFG))
+    sink = RotatingJsonlSink(str(tmp_path))
+    feed_result(sink, res, meta)
+    feed_result(sink, res, meta)
+    sink.flush()
+
+    batches = []
+    out = {}
+
+    def go():
+        out["report"] = Replayer().watch(
+            str(tmp_path), poll_s=0.05, max_runs=4, idle_timeout_s=60,
+            progress=lambda rep, n: batches.append((rep.replayed, n)))
+
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 30
+    while not batches and time.monotonic() < deadline:
+        time.sleep(0.01)                 # initial 2 runs observed first...
+    assert batches, "watch never saw the initial runs"
+    feed_result(sink, res, meta)         # ...then the live append
+    feed_result(sink, res, meta)
+    sink.flush()
+    t.join(60)
+    assert not t.is_alive()
+    sink.close()
+
+    report = out["report"]
+    assert report.replayed == 4
+    assert all(r.discrepancy == 0.0 for r in report.rows)
+    assert [r.index for r in report.rows] == [0, 1, 2, 3]
+    assert len(batches) >= 2             # incremental, not one batch
+    assert batches[0][0] == 2 and batches[-1][0] == 4
+
+
+def test_serve_replay_watch_wiring(tmp_path, capsys):
+    """serve --mode replay --watch drains an existing archive and exits at
+    --limit (the appended-while-running path is covered above)."""
+    import argparse
+
+    from repro.launch.serve import _replay_main
+
+    _write_archive(tmp_path, ["hanoi"])
+    args = argparse.Namespace(
+        archive_dir=str(tmp_path), archive_prefix="traces",
+        replay_mechanism="", limit=len(BENCH_NAMES), watch=True,
+        watch_poll_ms=50.0, watch_idle_s=30.0)
+    _replay_main(args)
+    out = capsys.readouterr().out
+    assert f"{len(BENCH_NAMES)} replayed; rolling" in out
+    assert "[replay] overall:" in out
+
+
+def test_index_scan_matches_reader_on_degraded_archives(tmp_path):
+    """scan_archive and ArchiveReader must share ONE definition of an
+    intact run — drift regression for: decodable-but-invalid issue/end
+    fields (reader voids the run, scanner must too) and a non-last file
+    whose final line lacks a trailing newline but parses (reader yields
+    the run, scanner must too)."""
+    from repro.archive.index import scan_archive
+
+    sink = _write_archive(tmp_path, ["hanoi", "simt_stack"])
+    assert len(sink.paths) >= 3
+
+    # a decodable issue line with missing fields, mid-run in file 0
+    first = sink.paths[0]
+    lines = open(first, encoding="utf-8").read().splitlines(keepends=True)
+    lines[1] = '{"event":"issue"}\n'                 # no pc/mask
+    open(first, "w", encoding="utf-8").writelines(lines)
+    # a NON-last file whose final (valid) line lacks its newline
+    mid = sink.paths[1]
+    raw = open(mid, encoding="utf-8").read()
+    assert raw.endswith("\n")
+    open(mid, "w", encoding="utf-8").write(raw[:-1])
+    # and a truncated LAST file (partial final line)
+    last = sink.paths[-1]
+    raw = open(last, encoding="utf-8").read()
+    open(last, "w", encoding="utf-8").write(raw[:-20])
+
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    _, entries = scan_archive(str(tmp_path))
+    assert len(entries) == len(runs)                 # same runs, same order
+    for entry, run in zip(entries, runs):
+        got = reader.get(entry.run_id)
+        assert dict(got.meta) == dict(run.meta)
+        assert got.trace == run.trace
+        assert entry.program == run.program
+    # the voided-run cases really happened (the fixtures did their job)
+    assert reader.report.corrupt_lines >= 1
+    assert reader.report.truncated_runs >= 1

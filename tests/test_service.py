@@ -9,6 +9,7 @@ every homogeneous ``hanoi_jax`` group through the native vmap
 ``batch_runner``.
 """
 import json
+import threading
 import time
 
 import numpy as np
@@ -244,7 +245,8 @@ def test_service_mixed_batch_order_and_equivalence():
     for w_res, w_exp in zip(sm.warps, sm_expected.warps):
         _same_outcome(w_res, w_exp)
     assert stats.sm_jobs == 1
-    assert stats.completed == len(jobs) + 1
+    # the SM cell counts per warp into the warp-level counters
+    assert stats.completed == len(jobs) + sm.n_warps
     assert stats.failed == 0 and stats.inflight == 0
 
 
@@ -381,6 +383,62 @@ def test_run_sm_grid_shards_cells():
                          inner="hanoi", policy=cell["policy"])
         assert sm.n_warps == cell["n_warps"] and sm.policy == cell["policy"]
         assert sm.sm_trace == exp.sm_trace and sm.cycles == exp.cycles
+
+
+def test_sm_cell_stats_count_per_warp():
+    """ISSUE 5 satellite regression: an SM cell used to bump submitted/
+    completed by 1 regardless of width, undercounting warps_per_s by
+    n_warps x.  Fixed samples: a 3-warp replicated cell + a 2-warp
+    heterogeneous cell = 5 warps, 2 cells, 2 latency samples."""
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        rep = svc.submit_sm(_bench("DIAMOND"), CFG, n_warps=3,
+                            inner="hanoi").result(120)
+        het = svc.submit_sm([_bench("DIAMOND"), _bench("HOTS0")], CFG,
+                            inner="hanoi").result(120)
+        stats = svc.stats()
+    assert rep.n_warps == 3 and het.n_warps == 2
+    assert stats.submitted == stats.completed == 5    # warps, not cells
+    assert stats.sm_jobs == 2
+    assert stats.failed == 0 and stats.inflight == 0
+    assert stats.warps_per_s == pytest.approx(5 / stats.uptime_s)
+    assert len(svc._latencies) == 2                   # cell latency: once
+
+
+def test_sm_cell_failure_counts_per_warp():
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        # 2 per-warp programs conflicting with n_warps=3 -> run_sm raises
+        t = svc.submit_sm([_bench("DIAMOND"), _bench("HOTS0")], CFG,
+                          n_warps=3, inner="hanoi")
+        with pytest.raises(ValueError, match="conflicts"):
+            t.result(120)
+        stats = svc.stats()
+    assert stats.failed == 2 and stats.completed == 0
+    assert stats.inflight == 0                        # accounting balanced
+
+
+def test_stop_shared_deadline_reports_stragglers():
+    """ISSUE 5 satellite: stop(timeout=T) must be ONE deadline across all
+    joins — per-thread budgets made worst-case shutdown (workers+1) x T —
+    and must report the threads still alive at expiry."""
+    svc = SimulationService(default_mechanism="hanoi", workers=2)
+    svc.start()
+    assert svc.run([_bench("DIAMOND")], CFG)[0].ok
+    sleepers = [threading.Thread(target=time.sleep, args=(30,),
+                                 daemon=True, name=f"wedged-{i}")
+                for i in range(3)]
+    for t in sleepers:
+        t.start()
+        svc._threads.append(t)                       # simulate wedged threads
+    t0 = time.monotonic()
+    stragglers = svc.stop(timeout=0.5)
+    elapsed = time.monotonic() - t0
+    # per-thread budgets would take >= 3 x 0.5s on the sleepers alone
+    assert elapsed < 1.2, elapsed
+    assert sorted(stragglers) == [f"wedged-{i}" for i in range(3)]
+    # a clean stop reports no stragglers
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc2:
+        svc2.run([_bench("DIAMOND")], CFG)
+    assert svc2.stop() == []                         # idempotent, clean
 
 
 # ---------------------------------------------------------------------------
