@@ -20,7 +20,13 @@ any mechanism by name:
    what was served: the paper's Fig 9 discrepancy metric, from the archive;
 7. index the archive (O(1) run lookup via the ``{prefix}.index.jsonl``
    sidecar), fetch one SM warp by id without scanning, and replay its
-   whole cell.
+   whole cell;
+8. price schedules on the event-driven cycle engine (``repro.timing``):
+   the Fig 10 IPC delta with a per-cycle stall taxonomy via
+   ``compare(timing="cycle")``, then re-derive an archived SM cell's IPC
+   offline from its traces — bit-equal to the ``sm_timing`` stamp — and
+   re-price it under different memory latencies without re-running
+   anything.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -161,4 +167,26 @@ with tempfile.TemporaryDirectory() as tmp:
     cell_replay = Replayer().replay(cell_runs)
     assert cell_replay.replayed == sm_cell.n_warps
     assert cell_replay.mean_discrepancy() == 0.0
+
+    # --- 8. cycle-accurate timing: Fig 10 IPC delta + offline re-pricing ----
+    from repro.core.timing import TimingConfig
+
+    rep10 = sim.compare(["hanoi", "simt_stack"], [benches[0]], CFG,
+                        timing="cycle")      # scoreboard cycle engine
+    r10 = rep10.pair("hanoi", "simt_stack")[0]
+    t_h = rep10.timing_results[(r10.program, "hanoi")]
+    print("\n=== Fig 10 on the cycle engine: IPC delta + stall taxonomy ===")
+    print(f"{r10.program}: ipc_delta={r10.ipc_delta_pct:+.2f}% "
+          f"(hanoi ipc={t_h.ipc:.3f}; stalls {t_h.stall_breakdown})")
+    assert t_h.cycles == (t_h.busy_cycles + t_h.scoreboard_stall_cycles
+                          + t_h.memory_stall_cycles)
+    # archived SM cells carry an sm_timing stamp: re-derive IPC offline
+    # (bit-equal under the config it ran with), then re-price it under
+    # slower memory without re-running any mechanism
+    (td,) = Replayer().rederive_timing(reader)
+    assert td.matches_archive and td.result.cycles == sm_cell.cycles
+    (slow,) = Replayer().rederive_timing(
+        reader, timing_cfg=TimingConfig(memory_latency=300))
+    print(f"SM cell re-derived offline: ipc={td.ipc:.2f} "
+          f"(stamp=match); at memory_latency=300: ipc={slow.ipc:.2f}")
 print("\nquickstart OK")

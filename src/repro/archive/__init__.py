@@ -49,10 +49,12 @@ from .index import ArchiveIndex, CompactReport, IndexEntry, compact
 from .reader import (ArchivedRun, ArchiveReader, ReadReport, parse_run,
                      request_from_meta)
 from .replay import (Aggregate, Replayer, ReplayReport, ReplayRow,
-                     nearest_rank)
+                     TimingRederivation, nearest_rank)
+from .tail import ArchiveTailer, TailStats
 
 __all__ = [
-    "Aggregate", "ArchiveIndex", "ArchiveReader", "ArchivedRun",
-    "CompactReport", "IndexEntry", "ReadReport", "Replayer", "ReplayReport",
-    "ReplayRow", "compact", "nearest_rank", "parse_run", "request_from_meta",
+    "Aggregate", "ArchiveIndex", "ArchiveReader", "ArchiveTailer",
+    "ArchivedRun", "CompactReport", "IndexEntry", "ReadReport", "Replayer",
+    "ReplayReport", "ReplayRow", "TailStats", "TimingRederivation",
+    "compact", "nearest_rank", "parse_run", "request_from_meta",
 ]

@@ -50,12 +50,31 @@ def _main_replay(argv: "list[str]") -> int:
                     help="exit 1 unless >=1 run replayed, every run has "
                          "exactly 0.0 discrepancy, and the whole archive "
                          "was walked (self-replay gate)")
+    ap.add_argument("--rederive-timing", action="store_true",
+                    help="also re-derive cycle-level IPC + stall breakdown "
+                         "for archived SM cells from their traces and "
+                         "cross-check the stamped sm_timing meta")
     args = ap.parse_args(argv)
 
     reader = ArchiveReader(args.directory, prefix=args.prefix)
     replayer = Replayer(args.mechanism or None)
     report = replayer.replay(reader, limit=args.limit or None)
     print(report.render())
+
+    if args.rederive_timing:
+        cells = replayer.rederive_timing(reader, limit=args.limit or None)
+        if not cells:
+            print("[timing] no SM cells in archive")
+        for td in cells:
+            t = td.result
+            stamp = ("stamp=match" if td.matches_archive else
+                     "stamp=MISMATCH" if td.archived is not None else
+                     "stamp=absent")
+            print(f"[timing] cell{td.cell} ({td.policy}, "
+                  f"{td.n_warps} warps): ipc={t.ipc:.3f} "
+                  f"cycles={t.cycles} stalls(i/s/m)="
+                  f"{t.issue_stall_cycles}/{t.scoreboard_stall_cycles}/"
+                  f"{t.memory_stall_cycles} {stamp}")
 
     if args.expect_zero:
         if report.read is not None and not report.read.complete:

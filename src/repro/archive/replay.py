@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Iterable
+from typing import Any, Callable, Iterable, Mapping
 
 import numpy as np
 
@@ -38,9 +38,41 @@ from repro.engine.registry import get_mechanism
 from repro.engine.simulator import Simulator
 
 from .reader import ArchivedRun, ArchiveReader, ReadReport
+from .tail import ArchiveTailer
 
 __all__ = ["Aggregate", "Replayer", "ReplayReport", "ReplayRow",
-           "nearest_rank"]
+           "TimingRederivation", "nearest_rank"]
+
+
+@dataclass(frozen=True)
+class TimingRederivation:
+    """One archived SM cell's IPC, re-derived offline from its warp traces.
+
+    ``result`` is the re-run of the cycle engine over the archived traces
+    and replay-payload programs under the archived ``sm_policy``;
+    ``archived`` is the ``sm_timing`` summary stamped at execution time
+    (``None`` for pre-timing archives).  When the same timing config is
+    used, ``matches_archive`` cross-checks the stamp bit-for-bit — the
+    archive-integrity analogue of the replay discrepancy being 0.0.
+    """
+
+    cell: int
+    policy: str
+    n_warps: int
+    result: Any                       # extended TimingResult
+    archived: "Mapping[str, Any] | None" = None
+
+    @property
+    def ipc(self) -> float:
+        return self.result.ipc
+
+    @property
+    def matches_archive(self) -> bool:
+        if self.archived is None:
+            return False
+        return (int(self.archived.get("cycles", -1)) == self.result.cycles
+                and int(self.archived.get("thread_instructions", -1))
+                == self.result.thread_instructions)
 
 
 @dataclass(frozen=True)
@@ -321,6 +353,62 @@ class Replayer:
                             read=reader.report if reader is not None
                             else None)
 
+    def rederive_timing(self, source:
+                        "str | ArchiveReader | Iterable[ArchivedRun]", *,
+                        timing_cfg: Any = None,
+                        limit: int | None = None
+                        ) -> list[TimingRederivation]:
+        """Re-derive cycle-level SM timing from the archive, offline.
+
+        Archived SM-cell warps (stamped by
+        :func:`repro.engine.sinks.sm_run_meta`) carry everything the cycle
+        engine needs: per-warp traces, replay-payload programs, and the
+        cell's issue policy.  This regroups each cell's warps and re-runs
+        :func:`repro.engine.mechanisms.sm.interleave_cycle` over them —
+        IPC and the full stall taxonomy without re-executing any warp.
+
+        ``timing_cfg`` (a :class:`~repro.core.timing.TimingConfig` or
+        :class:`~repro.timing.CycleConfig`) defaults to the live path's
+        default, in which case each rederivation's ``matches_archive``
+        cross-checks the ``sm_timing`` stamp written at execution time.
+        Passing a different config is the offline what-if: re-price an
+        archived fleet under new latency assumptions.  Cells with
+        unreplayable warps are skipped.
+        """
+        from repro.core.timing import TimingConfig
+        from repro.engine.mechanisms.sm import interleave_cycle
+        if isinstance(source, str):
+            source = ArchiveReader(source)
+        runs = (source.runs(limit) if isinstance(source, ArchiveReader)
+                else list(source)[:limit] if limit is not None
+                else list(source))
+        cells: dict[int, list[ArchivedRun]] = {}
+        for run in runs:
+            if run.sm_cell is not None:
+                cells.setdefault(run.sm_cell, []).append(run)
+        cfg = timing_cfg if timing_cfg is not None else TimingConfig()
+        out: list[TimingRederivation] = []
+        for cell, warps in sorted(cells.items()):
+            warps.sort(key=lambda r: int(r.meta.get("sm_warp", 0)))
+            traces, programs = [], []
+            for r in warps:
+                req = r.request()
+                if req is None:
+                    break
+                traces.append(list(r.trace))
+                programs.append(req.program)
+            else:
+                policy = str(warps[0].meta.get("sm_policy")
+                             or "greedy_then_oldest")
+                sched = interleave_cycle(traces, programs, policy, cfg)
+                archived = warps[0].meta.get("sm_timing")
+                out.append(TimingRederivation(
+                    cell=cell, policy=policy, n_warps=len(warps),
+                    result=sched.to_timing_result(),
+                    archived=(dict(archived)
+                              if isinstance(archived, Mapping) else None)))
+        return out
+
     def watch(self, source: "str | ArchiveReader", *,
               poll_s: float = 0.25,
               idle_timeout_s: float | None = None,
@@ -329,12 +417,15 @@ class Replayer:
               ) -> ReplayReport:
         """Tail a growing archive, replaying runs as they are appended.
 
-        Re-walks ``source`` every ``poll_s`` seconds (``ArchiveReader``
-        iteration is re-entrant over a still-growing directory), replays
-        only the runs not yet seen, and calls ``progress(report, n_new)``
-        with the *rolling cumulative* :class:`ReplayReport` after each
-        batch of new runs — the live Fig 9 aggregate of everything
-        replayed so far.
+        Polls ``source`` every ``poll_s`` seconds through an incremental
+        :class:`~repro.archive.tail.ArchiveTailer` — per-file byte offsets
+        carried between polls, so a tick costs only the newly appended
+        bytes (an unchanged archive is not even re-opened; a full re-walk
+        happens only when a file shrinks/disappears or the rotation order
+        changes).  Replays only the runs not yet seen, and calls
+        ``progress(report, n_new)`` with the *rolling cumulative*
+        :class:`ReplayReport` after each batch of new runs — the live
+        Fig 9 aggregate of everything replayed so far.
 
         Returns the final report when ``max_runs`` archived runs have been
         processed (replayed or skipped), or when no new runs have appeared
@@ -343,8 +434,10 @@ class Replayer:
         file is tolerated per poll exactly as in a one-shot read — a run
         the writer has not finished flushing is simply not yielded yet.
         """
-        reader = (ArchiveReader(source) if isinstance(source, str)
-                  else source)
+        if isinstance(source, ArchiveReader):
+            tailer = ArchiveTailer(source.directory, prefix=source.prefix)
+        else:
+            tailer = ArchiveTailer(source)
         rows: list[ReplayRow] = []
         skipped = {"unreplayable": 0, "untraced": 0, "unknown": 0}
         seen = 0
@@ -356,10 +449,10 @@ class Replayer:
                 skipped_unreplayable=skipped["unreplayable"],
                 skipped_untraced=skipped["untraced"],
                 skipped_unknown_mechanism=skipped["unknown"],
-                read=reader.report)
+                read=tailer.report)
 
         while True:
-            new = reader.runs()[seen:]
+            new = tailer.poll()
             if max_runs is not None:
                 new = new[:max(0, max_runs - seen)]
             if new:

@@ -2,9 +2,8 @@
 
 The paper feeds Hanoi's control-flow traces into Accel-Sim to measure the IPC
 impact of trace discrepancies (Fig 10).  Accel-Sim itself is not available in
-this environment, so we implement a compact trace-driven issue model with the
-properties that matter for *relative* IPC between two control-flow schedules
-of the same program:
+this environment, so we model the issue structure that matters for *relative*
+IPC between two control-flow schedules of the same program:
 
 * one issue slot per cycle per scheduler (Table III: 4 schedulers/SM — we
   model one scheduler; warps are those assigned to it);
@@ -16,6 +15,15 @@ of the same program:
 IPC here counts *thread* instructions (popcount of the active mask), so a
 schedule with better reconvergence shows both fewer issue slots and higher
 IPC — the paper's BFSD effect (+31.9% SIMD utilization => +83% IPC).
+
+This module is now the *legacy façade*: :func:`schedule_traces` and
+:func:`simulate` are thin shims over the event-driven cycle engine in
+:mod:`repro.timing` (trace-conservative, single-issue, fixed-latency mode —
+bit-identical to the historical loop, which is preserved below as
+:func:`schedule_traces_reference`, the differential oracle).  Pass a
+:class:`repro.timing.CycleConfig` instead of a :class:`TimingConfig` to get
+register-level scoreboards, memory-latency distributions, and dual issue
+through the same entry points.
 """
 from __future__ import annotations
 
@@ -37,23 +45,50 @@ class TimingConfig:
 
 @dataclass
 class TimingResult:
+    """Issue-schedule outcome.  The stall fields are populated by the
+    cycle engine (:mod:`repro.timing`); every ratio is guarded so a
+    zero-instruction schedule reports 0.0 instead of dividing by zero."""
+
     cycles: int
     issues: int                 # warp-instructions issued
     thread_instructions: int    # sum of active-mask popcounts
     warp_width: int
+    busy_cycles: int = 0
+    issue_stall_cycles: int = 0
+    scoreboard_stall_cycles: int = 0
+    memory_stall_cycles: int = 0
 
     @property
     def ipc(self) -> float:
         """Thread-level IPC (the paper's Fig 10 metric)."""
-        return self.thread_instructions / max(1, self.cycles)
+        if self.cycles <= 0:
+            return 0.0
+        return self.thread_instructions / self.cycles
 
     @property
     def warp_ipc(self) -> float:
-        return self.issues / max(1, self.cycles)
+        if self.cycles <= 0:
+            return 0.0
+        return self.issues / self.cycles
 
     @property
     def simd_utilization(self) -> float:
-        return self.thread_instructions / max(1, self.issues * self.warp_width)
+        denom = self.issues * self.warp_width
+        if denom <= 0:
+            return 0.0
+        return self.thread_instructions / denom
+
+    @property
+    def stall_cycles(self) -> int:
+        """Idle cycles (no warp could issue); busy + these == cycles when
+        the schedule came from the cycle engine."""
+        return self.scoreboard_stall_cycles + self.memory_stall_cycles
+
+    @property
+    def stall_breakdown(self) -> dict[str, int]:
+        return {"issue": self.issue_stall_cycles,
+                "scoreboard": self.scoreboard_stall_cycles,
+                "memory": self.memory_stall_cycles}
 
 
 def _latency(op: int, cfg: TimingConfig) -> int:
@@ -67,27 +102,46 @@ def _latency(op: int, cfg: TimingConfig) -> int:
     return cfg.alu_latency
 
 
+def _as_cycle_config(cfg):
+    """TimingConfig -> exact-compat CycleConfig; CycleConfig passes through."""
+    from repro.timing import CycleConfig
+    return CycleConfig.from_timing(cfg)
+
+
 def schedule_traces(traces: "list[list[tuple[int, int]]]",
                     prog_ops: "list[np.ndarray]",
                     policy: str = "greedy_then_oldest",
-                    cfg: TimingConfig = TimingConfig(),
+                    cfg: "TimingConfig | object" = TimingConfig(),
                     ) -> tuple[list[tuple[int, int, int]], int, int]:
-    """The one issue-scheduler loop: per-warp traces through one issue port.
+    """Per-warp traces through one issue port (shim over the cycle engine).
 
     ``prog_ops`` holds each warp's opcode column (warps may run different
-    programs — the per-SM model needs that).  Returns
-    ``(order, cycles, thread_instructions)`` with ``order`` the issued
-    ``(warp, pc, mask)`` slots.  Policies:
+    programs — the per-SM model needs that); full ``[L, N_FIELDS]`` row
+    tables are also accepted and are required when ``cfg`` is a scoreboard
+    :class:`repro.timing.CycleConfig`.  Returns ``(order, cycles,
+    thread_instructions)`` with ``order`` the issued ``(warp, pc, mask)``
+    slots.  Policies: ``greedy_then_oldest`` (GTO, Table III),
+    ``round_robin``, ``oldest_first`` — see :mod:`repro.timing.policies`.
 
-    * ``greedy_then_oldest`` — GTO (Table III): stay on the current warp
-      while it is ready; otherwise the oldest (lowest-id) ready warp; if
-      none is ready, fast-forward to the earliest ready time;
-    * ``round_robin``        — rotate over ready warps every slot.
-
+    With a :class:`TimingConfig` this reproduces
+    :func:`schedule_traces_reference` bit-for-bit (differential-tested).
     :func:`simulate` (the Fig 10 IPC model) and
     :func:`repro.engine.mechanisms.sm.interleave_traces` both delegate
     here, so latency semantics cannot drift apart.
     """
+    from repro.timing import schedule_cycle
+    res = schedule_cycle(traces, prog_ops, policy, _as_cycle_config(cfg))
+    return res.order, res.cycles, res.thread_instructions
+
+
+def schedule_traces_reference(traces: "list[list[tuple[int, int]]]",
+                              prog_ops: "list[np.ndarray]",
+                              policy: str = "greedy_then_oldest",
+                              cfg: TimingConfig = TimingConfig(),
+                              ) -> tuple[list[tuple[int, int, int]], int, int]:
+    """The historical uniform-cost issue loop, kept verbatim as the
+    differential oracle for the cycle engine's trace-conservative mode
+    (the role ``levenshtein_dp`` plays for the bit-parallel matcher)."""
     n = len(traces)
     idx = [0] * n
     ready = [0] * n
@@ -130,13 +184,18 @@ def schedule_traces(traces: "list[list[tuple[int, int]]]",
 def simulate(traces: list[list[tuple[int, int]]],
              program: np.ndarray,
              warp_width: int,
-             cfg: TimingConfig = TimingConfig()) -> TimingResult:
-    """GTO issue simulation over per-warp control-flow traces."""
-    prog_ops = np.asarray(program)[:, F_OP]
-    order, cycles, tinstr = schedule_traces(
-        traces, [prog_ops] * len(traces), "greedy_then_oldest", cfg)
-    return TimingResult(cycles=cycles, issues=len(order),
-                        thread_instructions=tinstr, warp_width=warp_width)
+             cfg: "TimingConfig | object" = TimingConfig()) -> TimingResult:
+    """GTO issue simulation over per-warp control-flow traces.
+
+    Shim over :func:`repro.timing.simulate_cycle`: a legacy
+    :class:`TimingConfig` runs the exact-compat trace-conservative mode; a
+    :class:`repro.timing.CycleConfig` unlocks scoreboards / memory
+    distributions / dual issue.  Either way the result carries the stall
+    breakdown fields.
+    """
+    from repro.timing import simulate_cycle
+    return simulate_cycle(traces, np.asarray(program), warp_width,
+                          _as_cycle_config(cfg))
 
 
 def ipc_delta(res_a: TimingResult, res_b: TimingResult) -> float:

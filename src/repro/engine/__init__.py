@@ -73,7 +73,7 @@ from .registry import (Mechanism, available_mechanisms, get_mechanism,
                        unregister_mechanism)
 from .sinks import (JsonlSink, MemorySink, RingBufferSink, RotatingJsonlSink,
                     TraceSink, feed_result, replay_payload, run_meta,
-                    sm_run_meta)
+                    sm_run_meta, timing_meta)
 from .types import (SimRequest, SimResult, SimStatus, SmResult,
                     classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
@@ -86,6 +86,7 @@ __all__ = [
     "SimResult", "SimStatus", "SmResult", "Simulator", "TraceSink",
     "as_request", "available_mechanisms", "classify_status", "feed_result",
     "get_mechanism", "iter_mechanisms", "register_mechanism",
-    "replay_payload", "run_meta", "sm_run_meta", "unregister_mechanism",
+    "replay_payload", "run_meta", "sm_run_meta", "timing_meta",
+    "unregister_mechanism",
     "worst_status",
 ]

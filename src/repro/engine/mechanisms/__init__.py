@@ -14,8 +14,10 @@ Importing this package (done by ``repro.engine``) registers both.
 """
 from . import volta, sm  # noqa: F401  (import side effect: registration)
 
-from .sm import SM_POLICIES, build_sm_result, interleave_traces  # noqa: F401
+from .sm import (SM_POLICIES, build_sm_result, interleave_cycle,  # noqa: F401
+                 interleave_traces)
 from .volta import run_volta_itps  # noqa: F401
 
-__all__ = ["SM_POLICIES", "build_sm_result", "interleave_traces",
+__all__ = ["SM_POLICIES", "build_sm_result", "interleave_cycle",
+           "interleave_traces",
            "run_volta_itps"]

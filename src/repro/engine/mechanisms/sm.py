@@ -38,39 +38,54 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.timing import TimingConfig, schedule_traces
-from repro.core.isa import F_OP
+from repro.core.timing import TimingConfig
+from repro.timing import CycleConfig, CycleResult, schedule_cycle
+from repro.timing.policies import POLICY_NAMES, resolve_policy_name
 
 from ..registry import get_mechanism, register_mechanism
 from ..types import SimRequest, SimResult, SmResult, worst_status
 
-SM_POLICIES = ("round_robin", "greedy_then_oldest")
+# the SM scheduler arbitrates through the shared repro.timing policy layer,
+# so its policy names are exactly the registered issue policies
+SM_POLICIES = POLICY_NAMES
 
 DEFAULT_WARPS = 4
 DEFAULT_INNER = "hanoi"
 DEFAULT_POLICY = "round_robin"
 
 
+def interleave_cycle(traces: Sequence[Sequence[tuple[int, int]]],
+                     programs: Sequence[np.ndarray],
+                     policy: str = DEFAULT_POLICY,
+                     tcfg: "TimingConfig | CycleConfig" = TimingConfig(),
+                     ) -> CycleResult:
+    """Schedule per-warp traces through one SM issue port, cycle-level.
+
+    Thin façade over :func:`repro.timing.schedule_cycle` — the one issue
+    engine the Fig 10 IPC model also uses — passing full program rows so a
+    scoreboard :class:`~repro.timing.CycleConfig` gets real register
+    dependences.  A legacy :class:`TimingConfig` runs the exact-compat
+    trace-conservative mode.
+    """
+    policy = resolve_policy_name(policy)
+    return schedule_cycle([list(t) for t in traces],
+                          [np.asarray(p) for p in programs],
+                          policy, CycleConfig.from_timing(tcfg))
+
+
 def interleave_traces(traces: Sequence[Sequence[tuple[int, int]]],
                       programs: Sequence[np.ndarray],
                       policy: str = DEFAULT_POLICY,
-                      tcfg: TimingConfig = TimingConfig(),
+                      tcfg: "TimingConfig | CycleConfig" = TimingConfig(),
                       ) -> tuple[list[tuple[int, int, int]], int, int]:
-    """Schedule per-warp traces through one SM issue port.
+    """Legacy-shaped façade over :func:`interleave_cycle`.
 
     Returns ``(sm_trace, cycles, thread_instructions)`` where ``sm_trace``
-    is the issue order as ``(warp, pc, mask)`` and ``cycles`` accounts for
-    per-instruction latency with trace-level dependence conservatism (a
-    warp's next instruction waits for its previous one).  Thin façade over
-    :func:`repro.core.timing.schedule_traces` — the one scheduler loop the
-    Fig 10 IPC model also uses — adding policy validation and per-warp
-    opcode extraction.
+    is the issue order as ``(warp, pc, mask)``; callers that want the stall
+    breakdown use :func:`interleave_cycle` directly.
     """
-    if policy not in SM_POLICIES:
-        raise ValueError(f"unknown SM policy {policy!r}; "
-                         f"known: {SM_POLICIES}")
-    prog_ops = [np.asarray(p)[:, F_OP] for p in programs]
-    return schedule_traces([list(t) for t in traces], prog_ops, policy, tcfg)
+    res = interleave_cycle(traces, programs, policy, tcfg)
+    return res.order, res.cycles, res.thread_instructions
 
 
 def build_sm_result(reqs: Sequence[SimRequest],
@@ -78,22 +93,28 @@ def build_sm_result(reqs: Sequence[SimRequest],
                     *,
                     inner: str,
                     policy: str = DEFAULT_POLICY,
-                    timing_cfg: TimingConfig = TimingConfig(),
+                    timing_cfg: "TimingConfig | CycleConfig" = TimingConfig(),
                     wall_time_s: float = 0.0) -> SmResult:
     """Assemble the SM aggregate from per-warp requests and results."""
-    sm_trace, cycles, tinstr = interleave_traces(
+    sched = interleave_cycle(
         [list(r.trace) for r in results],
         [np.asarray(q.program) for q in reqs], policy, timing_cfg)
     width = max(q.resolved_cfg().n_threads for q in reqs)
-    steps = len(sm_trace)
+    steps = len(sched.order)
     return SmResult(
-        mechanism="sm_interleave", inner=inner, policy=policy,
-        warps=tuple(results), sm_trace=tuple(sm_trace),
+        mechanism="sm_interleave", inner=inner,
+        policy=resolve_policy_name(policy),
+        warps=tuple(results), sm_trace=tuple(sched.order),
         status=worst_status([r.status for r in results]),
-        steps=steps, cycles=cycles, thread_instructions=tinstr,
-        utilization=tinstr / max(1, steps * width),
+        steps=steps, cycles=sched.cycles,
+        thread_instructions=sched.thread_instructions,
+        utilization=sched.thread_instructions / max(1, steps * width),
         requests=tuple(reqs),
-        wall_time_s=wall_time_s)
+        wall_time_s=wall_time_s,
+        busy_cycles=sched.busy_cycles,
+        issue_stall_cycles=sched.issue_stall_cycles,
+        scoreboard_stall_cycles=sched.scoreboard_stall_cycles,
+        memory_stall_cycles=sched.memory_stall_cycles)
 
 
 def warp_count(programs, n_warps: "int | None") -> int:
@@ -148,4 +169,5 @@ def _run_sm_interleave(req: SimRequest) -> SimResult:
 
 
 __all__ = ["SM_POLICIES", "DEFAULT_WARPS", "DEFAULT_INNER", "DEFAULT_POLICY",
-           "interleave_traces", "build_sm_result", "warp_count"]
+           "interleave_cycle", "interleave_traces", "build_sm_result",
+           "warp_count"]

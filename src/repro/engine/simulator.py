@@ -23,7 +23,7 @@ from repro.core.trace import discrepancy
 
 from .registry import Mechanism, get_mechanism
 from .sinks import (TraceSink, feed_result, next_sm_cell_id, run_meta,
-                    sm_run_meta)
+                    sm_run_meta, timing_meta)
 from .types import SimRequest, SimResult, SmResult
 
 ProgramLike = Any    # np.ndarray | Benchmark | SimRequest
@@ -86,11 +86,18 @@ class CompareRow:
 
 @dataclass(frozen=True)
 class CompareReport:
-    """All pairwise rows plus the per-mechanism raw results."""
+    """All pairwise rows plus the per-mechanism raw results.
+
+    ``timing_results`` maps ``(program, mechanism)`` to the
+    :class:`~repro.core.timing.TimingResult` behind the row's IPC numbers
+    (empty when ``timing=False``) — under ``timing="cycle"`` that is where
+    the per-schedule stall breakdown lives.
+    """
 
     mechanisms: tuple[str, ...]
     rows: tuple[CompareRow, ...]
     results: dict = field(default_factory=dict)   # (program, mech) -> SimResult
+    timing_results: dict = field(default_factory=dict)
 
     def pair(self, mech_a: str, mech_b: str) -> list[CompareRow]:
         """Rows for the ordered pair; raises KeyError for a pair that was
@@ -191,7 +198,7 @@ class Simulator:
                n_warps: int | None = None,
                inner: str | None = None,
                policy: str = "round_robin",
-               timing_cfg: TimingConfig = TimingConfig(),
+               timing_cfg: "TimingConfig | object" = TimingConfig(),
                sink: TraceSink | None = None,
                **request_kw) -> SmResult:
         """Run N warps on one SM through a single-warp mechanism.
@@ -249,11 +256,12 @@ class Simulator:
         out_sink = sink or self._sink
         if out_sink is not None:
             cell = next_sm_cell_id()
+            tmeta = timing_meta(sm)
             for w, (req, res) in enumerate(zip(reqs, results)):
                 feed_result(out_sink, res,
                             sm_run_meta(inner_name, req, warp=w,
-                                        n_warps=len(reqs), policy=policy,
-                                        cell=cell))
+                                        n_warps=len(reqs), policy=sm.policy,
+                                        cell=cell, timing=tmeta))
         return sm
 
     # -- mechanism comparison (the paper's evaluation as an API) ------------
@@ -263,30 +271,44 @@ class Simulator:
                 cfg: MachineConfig | None = None, *,
                 baseline: str | None = None,
                 pairs: Sequence[tuple[str, str]] | None = None,
-                timing: bool = True,
+                timing: "bool | str" = True,
                 timing_warps: int = 4,
-                timing_cfg: TimingConfig = TimingConfig(),
+                timing_cfg: "TimingConfig | object" = TimingConfig(),
                 **request_kw) -> CompareReport:
         """Run ``programs`` under each mechanism; diff every pair.
 
         For each program and ordered pair ``(a, b)`` the report carries the
         paper's two metrics: control-flow trace discrepancy (normalized
         Levenshtein, ``b`` as the reference — Fig 9) and the relative IPC
-        delta from the trace-driven GTO timing model (Fig 10, with
-        ``timing_warps`` identical warps per scheduler).  ``pairs`` defaults
-        to all ordered pairs of ``mechanisms``.
+        delta from the GTO timing model (Fig 10, with ``timing_warps``
+        identical warps per scheduler).  ``pairs`` defaults to all ordered
+        pairs of ``mechanisms``.
+
+        ``timing`` selects the IPC model:
+
+        * ``True`` / ``"trace"`` — the legacy trace-conservative uniform
+          model (every instruction depends on its predecessor);
+        * ``"cycle"`` — the event-driven cycle engine (:mod:`repro.timing`)
+          with per-warp register scoreboards, the Fig 10 configuration the
+          paper's 0.19%-IPC claim is judged under; per-schedule stall
+          breakdowns land in ``report.timing_results``.  ``timing_cfg`` may
+          be a :class:`~repro.timing.CycleConfig` to also pick memory
+          distributions / dual issue (a plain :class:`TimingConfig` is
+          lifted onto the scoreboard model);
+        * ``False`` — skip the (pure-Python, per-trace-slot) timing model
+          for callers that only consume discrepancy/utilization: IPC fields
+          come back NaN and utilization is taken directly from the traces
+          (the same value the timing model would report).
 
         Conveniences: ``mechanisms`` may be a single name, ``baseline``
         appends a reference mechanism and restricts ``pairs`` to
         ``(mech, baseline)``, and ``programs=None`` defaults to the paper's
         benchmark suite — so ``compare("volta_itps",
         baseline="turing_oracle")`` is a complete evaluation call.
-
-        ``timing=False`` skips the (pure-Python, per-trace-slot) timing
-        model for callers that only consume discrepancy/utilization: IPC
-        fields come back NaN and utilization is taken directly from the
-        traces (the same value the timing model would report).
         """
+        if isinstance(timing, str) and timing not in ("trace", "cycle"):
+            raise ValueError(f"timing must be True/False/'trace'/'cycle', "
+                             f"got {timing!r}")
         if isinstance(mechanisms, str):
             mechanisms = [mechanisms]
         names = [get_mechanism(m).name for m in mechanisms]
@@ -320,6 +342,12 @@ class Simulator:
             pairs = [(a, b) for a, b in itertools.permutations(names, 2)]
         rows = []
         timing_cache: dict[tuple[str, str], Any] = {}
+        if timing == "cycle":
+            from repro.timing import CycleConfig
+            run_cfg: Any = CycleConfig.from_timing(timing_cfg,
+                                                   scoreboard=True)
+        else:
+            run_cfg = timing_cfg
 
         def timed(pid: str, req: SimRequest, mech_name: str):
             key = (pid, mech_name)
@@ -327,7 +355,7 @@ class Simulator:
                 res = results[key]
                 timing_cache[key] = simulate(
                     [list(res.trace)] * timing_warps, req.program,
-                    req.resolved_cfg().n_threads, timing_cfg)
+                    req.resolved_cfg().n_threads, run_cfg)
             return timing_cache[key]
 
         nan = float("nan")
@@ -351,7 +379,7 @@ class Simulator:
                     status_a=ra.status.value, status_b=rb.status.value,
                     trace_len_a=len(ra.trace), trace_len_b=len(rb.trace)))
         return CompareReport(mechanisms=tuple(names), rows=tuple(rows),
-                             results=results)
+                             results=results, timing_results=timing_cache)
 
     # -- internals ----------------------------------------------------------
 

@@ -192,8 +192,29 @@ def next_sm_cell_id() -> int:
     return next(_sm_cell_ids)
 
 
+def timing_meta(sched: Any) -> dict[str, Any]:
+    """JSON-able cycle/stall summary of a timed schedule.
+
+    Accepts anything with the cycle-engine accounting fields (``SmResult``,
+    ``CycleResult``, extended ``TimingResult``).  Archived alongside the
+    replay payload so offline tooling can read the stall taxonomy and
+    re-derive IPC (= ``thread_instructions / cycles``) without re-running
+    the timing model — and cross-check it against a re-run when it does
+    (:meth:`repro.archive.Replayer.rederive_timing`).
+    """
+    return {"cycles": int(sched.cycles),
+            "thread_instructions": int(sched.thread_instructions),
+            "busy_cycles": int(getattr(sched, "busy_cycles", 0)),
+            "issue_stall_cycles": int(getattr(sched, "issue_stall_cycles", 0)),
+            "scoreboard_stall_cycles":
+                int(getattr(sched, "scoreboard_stall_cycles", 0)),
+            "memory_stall_cycles":
+                int(getattr(sched, "memory_stall_cycles", 0))}
+
+
 def sm_run_meta(inner: str, req: SimRequest, *, warp: int, n_warps: int,
-                policy: str, cell: int) -> dict[str, Any]:
+                policy: str, cell: int,
+                timing: "Mapping[str, Any] | None" = None) -> dict[str, Any]:
     """The canonical begin-event meta for one warp of an SM cell.
 
     The SM variant of :func:`run_meta`: the same replayable payload (the
@@ -202,11 +223,15 @@ def sm_run_meta(inner: str, req: SimRequest, *, warp: int, n_warps: int,
     execution) plus the cell coordinates — ``sm_warp`` (index within the
     cell), ``sm_warps`` (cell width), ``sm_policy`` (issue scheduler) and
     ``sm_cell`` (grouping id) — so :class:`repro.archive.Replayer` can
-    reassemble per-cell and per-policy discrepancy breakdowns.
+    reassemble per-cell and per-policy discrepancy breakdowns.  ``timing``
+    (usually :func:`timing_meta` of the cell's schedule) lands under
+    ``sm_timing`` so archives carry the cycle/stall breakdown.
     """
     meta = run_meta(inner, req)
     meta.update({"sm_warp": int(warp), "sm_warps": int(n_warps),
                  "sm_policy": str(policy), "sm_cell": int(cell)})
+    if timing is not None:
+        meta["sm_timing"] = dict(timing)
     return meta
 
 

@@ -178,6 +178,13 @@ class SmResult:
     utilization: float                # SIMD utilization over the SM trace
     requests: tuple[SimRequest, ...] = ()   # per-warp requests (replay)
     wall_time_s: float = 0.0
+    # stall taxonomy of the cycle-level schedule (repro.timing): busy +
+    # scoreboard-stall + memory-stall partition ``cycles``; issue-stall
+    # counts port-contention cycles and overlaps busy ones
+    busy_cycles: int = 0
+    issue_stall_cycles: int = 0
+    scoreboard_stall_cycles: int = 0
+    memory_stall_cycles: int = 0
     meta: Mapping[str, Any] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -193,12 +200,23 @@ class SmResult:
 
     @property
     def ipc(self) -> float:
-        """Thread-level IPC of the interleaved SM schedule."""
-        return self.thread_instructions / max(1, self.cycles)
+        """Thread-level IPC of the interleaved SM schedule (0.0 for an
+        empty schedule)."""
+        if self.cycles <= 0:
+            return 0.0
+        return self.thread_instructions / self.cycles
 
     @property
     def warp_ipc(self) -> float:
-        return self.steps / max(1, self.cycles)
+        if self.cycles <= 0:
+            return 0.0
+        return self.steps / self.cycles
+
+    @property
+    def stall_breakdown(self) -> dict[str, int]:
+        return {"issue": self.issue_stall_cycles,
+                "scoreboard": self.scoreboard_stall_cycles,
+                "memory": self.memory_stall_cycles}
 
 
 def classify_status(*, finished: int, full_mask: int, fuel_left: int,

@@ -53,7 +53,7 @@ from repro.core.trace import nearest_rank
 from repro.engine.registry import get_mechanism
 from repro.engine.simulator import ProgramLike, Simulator, as_request
 from repro.engine.sinks import (TraceSink, feed_result, next_sm_cell_id,
-                                run_meta, sm_run_meta)
+                                run_meta, sm_run_meta, timing_meta)
 from repro.engine.types import SimRequest, SimResult, SmResult
 
 from .coalescer import BatchCoalescer, FlushedGroup
@@ -100,6 +100,10 @@ class ServiceStats:
     ``batch_fill`` is the coalescing histogram: ``(batch_size, count)``
     pairs, ascending — a service soaking enough homogeneous traffic shows
     mass at ``max_batch``.
+
+    The ``sm_*_cycles`` fields aggregate the cycle-level stall taxonomy
+    (:mod:`repro.timing`, see ``docs/timing.md``) over every SM cell this
+    service executed — the fleet-level view of where issue slots went.
     """
 
     uptime_s: float
@@ -119,6 +123,11 @@ class ServiceStats:
     latency_p50_s: float
     latency_p99_s: float
     warps_per_s: float
+    sm_cycles: int = 0                    # total SM-cell schedule cycles
+    sm_busy_cycles: int = 0
+    sm_issue_stall_cycles: int = 0
+    sm_scoreboard_stall_cycles: int = 0
+    sm_memory_stall_cycles: int = 0
 
     @property
     def mean_fill(self) -> float:
@@ -127,6 +136,12 @@ class ServiceStats:
         if n == 0:
             return float("nan")
         return sum(s * c for s, c in self.batch_fill) / n
+
+    @property
+    def sm_stall_breakdown(self) -> dict[str, int]:
+        return {"issue": self.sm_issue_stall_cycles,
+                "scoreboard": self.sm_scoreboard_stall_cycles,
+                "memory": self.sm_memory_stall_cycles}
 
 
 @dataclass
@@ -204,6 +219,8 @@ class SimulationService:
             "batches": 0, "native_batches": 0, "native_warps": 0,
             "sm_jobs": 0, "flush_size": 0, "flush_deadline": 0,
             "flush_manual": 0,
+            "sm_cycles": 0, "sm_busy_cycles": 0, "sm_issue_stall_cycles": 0,
+            "sm_scoreboard_stall_cycles": 0, "sm_memory_stall_cycles": 0,
         }
         self._fill: Counter = Counter()
         self._latencies: deque = deque(maxlen=4096)
@@ -383,7 +400,11 @@ class SimulationService:
             batch_fill=fill,
             latency_p50_s=nearest_rank(lat, 0.50),
             latency_p99_s=nearest_rank(lat, 0.99),
-            warps_per_s=s["completed"] / uptime)
+            warps_per_s=s["completed"] / uptime,
+            sm_cycles=s["sm_cycles"], sm_busy_cycles=s["sm_busy_cycles"],
+            sm_issue_stall_cycles=s["sm_issue_stall_cycles"],
+            sm_scoreboard_stall_cycles=s["sm_scoreboard_stall_cycles"],
+            sm_memory_stall_cycles=s["sm_memory_stall_cycles"])
 
     # -- internals: flusher -------------------------------------------------
 
@@ -477,17 +498,24 @@ class SimulationService:
         # façade uses (sm_run_meta: replay payload + cell coordinates) —
         # a service-archived SM cell replays bit-equal to a live run
         cell = next_sm_cell_id()
+        tmeta = timing_meta(sm)
         for w, (warp_req, warp_res) in enumerate(zip(sm.requests, sm.warps)):
             self._archive_result(
                 warp_res, sm.inner,
                 meta=sm_run_meta(sm.inner, warp_req, warp=w,
                                  n_warps=sm.n_warps, policy=sm.policy,
-                                 cell=cell))
+                                 cell=cell, timing=tmeta))
         job.ticket._future.set_result(sm)
         with self._lock:
             self._stats["completed"] += job.warps
             self._stats["inflight"] -= job.warps
             self._stats["sm_jobs"] += 1
+            self._stats["sm_cycles"] += sm.cycles
+            self._stats["sm_busy_cycles"] += sm.busy_cycles
+            self._stats["sm_issue_stall_cycles"] += sm.issue_stall_cycles
+            self._stats["sm_scoreboard_stall_cycles"] += \
+                sm.scoreboard_stall_cycles
+            self._stats["sm_memory_stall_cycles"] += sm.memory_stall_cycles
             self._latencies.append(now - job.ticket.submitted_at)
 
     def _archive_result(self, result: SimResult, mechanism: str,

@@ -1,0 +1,127 @@
+"""Pluggable warp issue policies — the ONE policy layer for every scheduler.
+
+Both the legacy Fig 10 model (:mod:`repro.core.timing`, via its shim over
+the cycle engine) and the per-SM interleaver
+(:mod:`repro.engine.mechanisms.sm`) select warps through these classes, so
+the semantics of ``greedy_then_oldest`` cannot drift between the IPC
+evaluation and the SM mechanism — the asymmetry this package was built to
+close.
+
+A policy is a small stateful object: ``select(ready)`` picks one warp id
+out of the ready set, ``issued(w)`` notifies it of the grant (so GTO can
+stay greedy and round-robin can advance its cursor).  Policies never see
+latencies or scoreboards — readiness is the model's job; arbitration is
+the policy's.
+
+Registered policies:
+
+* ``greedy_then_oldest`` (alias ``gto``) — stay on the last-granted warp
+  while it is ready, else the oldest (lowest-id) ready warp.  The paper's
+  Table III scheduler.
+* ``round_robin`` — rotate a cursor over ready warps every grant.
+* ``oldest_first`` — always the lowest-id ready warp (no greedy
+  stickiness); the degenerate baseline that makes GTO's locality win
+  measurable.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+__all__ = ["IssuePolicy", "GreedyThenOldest", "RoundRobin", "OldestFirst",
+           "POLICY_NAMES", "get_policy", "resolve_policy_name"]
+
+
+class IssuePolicy:
+    """Base class: subclasses implement ``select``; ``issued`` is optional."""
+
+    name = "abstract"
+
+    def __init__(self, n_warps: int) -> None:
+        if n_warps < 0:
+            raise ValueError(f"n_warps must be >= 0, got {n_warps}")
+        self.n_warps = n_warps
+
+    def select(self, ready: Sequence[int]) -> int:
+        raise NotImplementedError
+
+    def issued(self, warp: int) -> None:   # pragma: no cover - trivial hook
+        pass
+
+    def stalled(self) -> None:             # pragma: no cover - trivial hook
+        """The scheduler sat idle (no ready warp) before this selection."""
+        pass
+
+
+class GreedyThenOldest(IssuePolicy):
+    """GTO: greedy on the current warp, else oldest ready (lowest id)."""
+
+    name = "greedy_then_oldest"
+
+    def __init__(self, n_warps: int) -> None:
+        super().__init__(n_warps)
+        self._last: int | None = 0   # legacy loop's initial ``cur = 0``
+
+    def select(self, ready: Sequence[int]) -> int:
+        if self._last is not None and self._last in ready:
+            return self._last
+        return min(ready)
+
+    def issued(self, warp: int) -> None:
+        self._last = warp
+
+    def stalled(self) -> None:
+        # After an idle gap the legacy loop re-picks the oldest ready warp
+        # even when the greedy warp woke at the same instant; drop the
+        # stickiness so the shim stays bit-identical to it.
+        self._last = None
+
+
+class RoundRobin(IssuePolicy):
+    """Fair rotation: the ready warp closest after the last grant."""
+
+    name = "round_robin"
+
+    def __init__(self, n_warps: int) -> None:
+        super().__init__(n_warps)
+        self._next = 0
+
+    def select(self, ready: Sequence[int]) -> int:
+        n = max(1, self.n_warps)
+        return min(ready, key=lambda w: (w - self._next) % n)
+
+    def issued(self, warp: int) -> None:
+        self._next = warp + 1
+
+
+class OldestFirst(IssuePolicy):
+    """Always the lowest-id ready warp — GTO without the greedy half."""
+
+    name = "oldest_first"
+
+    def select(self, ready: Sequence[int]) -> int:
+        return min(ready)
+
+
+_POLICIES = {
+    GreedyThenOldest.name: GreedyThenOldest,
+    RoundRobin.name: RoundRobin,
+    OldestFirst.name: OldestFirst,
+}
+_ALIASES = {"gto": GreedyThenOldest.name}
+
+#: Canonical policy names, stable order (aliases not included).
+POLICY_NAMES = tuple(_POLICIES)
+
+
+def resolve_policy_name(name: str) -> str:
+    """Canonical name for ``name`` (aliases resolved); raises ValueError."""
+    canon = _ALIASES.get(name, name)
+    if canon not in _POLICIES:
+        known = POLICY_NAMES + tuple(_ALIASES)
+        raise ValueError(f"unknown issue policy {name!r}; known: {known}")
+    return canon
+
+
+def get_policy(name: str, n_warps: int) -> IssuePolicy:
+    """A fresh policy instance for one schedule run."""
+    return _POLICIES[resolve_policy_name(name)](n_warps)

@@ -4,7 +4,7 @@ Lives outside the test modules (and imports no hypothesis) so that
 benchmark/property consumers can build the same If/While/BREAK program
 distribution regardless of whether hypothesis is installed.
 
-Two distributions:
+Three distributions:
 
 * ``make_program(seed, n_bx)`` — the original If/While/BREAK nest
   distribution, unchanged (bit-identical rng stream) so the long-standing
@@ -18,6 +18,15 @@ Two distributions:
   which is exactly what the differential suite's "agree wherever both
   finish" contract is for.  Memory is widened so the lock/counter cells sit
   above every lane-private address.
+* ``make_program(seed, n_bx, mem_features=True)`` — additionally weaves in
+  the memory-latency-heavy shapes the cycle-accurate timing suite needs:
+  long-latency loads feeding dependent ALU chains (the scoreboard must
+  stall the consumer, not the whole warp) and loads inside divergent
+  branches (only part of the warp is behind the miss).  Drawn from an
+  independent rng stream, so base shapes per seed are unchanged.
+
+Feature flags compose: each draws from its own seeded rng, and none of
+them perturbs the historical base stream.
 """
 import numpy as np
 
@@ -153,20 +162,63 @@ def _break_nested_while(rng) -> Seq:
                       body=body, break_pred=2)])
 
 
-def make_program(seed: int, n_bx: int, *, sync_features: bool = False):
+def _load_use_chain(mrng) -> Raw:
+    """A long-latency load feeding a dependent ALU chain.
+
+    The first consumer (``IADD R6, R5, R6``) has a RAW hazard on the load
+    destination: under the cycle model the scoreboard must park the warp
+    for the full memory latency before the chain can start, while the
+    trace-conservative model charges only the issue slot.  The chain then
+    alternates R5/R6 so every instruction depends on its predecessor —
+    no independent work for dual-issue to hide the miss behind.
+    """
+    ops = [f"LDG R5, [R1+{int(mrng.choice(_RD_OFFS))}]"]
+    for _ in range(int(mrng.integers(3, 7))):
+        ops.append("IADD R6, R5, R6")
+        ops.append("XOR R5, R6, R2")
+    return Raw(ops)
+
+
+def _divergent_load(mrng) -> If:
+    """A load inside a divergent branch (the load-behind-divergence shape).
+
+    Only the lanes that take the branch are behind the miss; the timing
+    model still stalls the whole warp (per-warp scoreboard), which is the
+    behaviour the stall-taxonomy tests pin down.
+    """
+    then_ = Raw([f"LDG R5, [R1+{int(mrng.choice(_RD_OFFS))}]",
+                 "IADD R6, R6, R5"])
+    else_ = Raw([f"LDG R5, [R1+{int(mrng.choice(_RD_OFFS))}]",
+                 "XOR R6, R5, R2"])
+    return If(cond=[f"ISETP.LT P0, R1, {int(mrng.integers(1, W))}"], pred=0,
+              then_=then_, else_=else_ if mrng.integers(0, 2) else None)
+
+
+def make_program(seed: int, n_bx: int, *, sync_features: bool = False,
+                 mem_features: bool = False):
     """Build one random program; returns ``((prog, mem), cfg)`` or
     ``(None, cfg)`` for legitimately rejected shapes.
 
-    ``sync_features=False`` reproduces the historical distribution exactly
-    (same rng stream, same MachineConfig).  ``sync_features=True`` draws the
-    extra constructs from an independent rng so the base shape for a given
-    seed stays recognizable, and widens ``mem_size`` for the shared cells.
+    All flags off reproduces the historical distribution exactly (same rng
+    stream, same MachineConfig).  ``sync_features=True`` draws the
+    synchronization constructs from an independent rng so the base shape
+    for a given seed stays recognizable, and widens ``mem_size`` for the
+    shared cells.  ``mem_features=True`` appends memory-latency-heavy
+    shapes (load→dependent-ALU chains, loads in divergent branches) drawn
+    from another independent rng; it composes with ``sync_features``.
     """
     rng = np.random.default_rng(seed)
     base = [Raw(["LANEID R1", "MOVR R2, R1"]),
             _node(rng, 0, 0),
             _node(rng, 0, 0)]
     cfg = BASE_CFG._replace(n_bx=n_bx)
+    mem_nodes: "list[Raw | If]" = []
+    if mem_features:
+        mrng = np.random.default_rng(seed ^ 0x9E3779B9)
+        mem_nodes.append(_load_use_chain(mrng))
+        mem_nodes.append(_divergent_load(mrng))
+        if mrng.integers(0, 2):
+            mem_nodes.append(_load_use_chain(mrng))
     if sync_features:
         srng = np.random.default_rng(seed ^ 0x5F3759DF)
         full = (1 << W) - 1
@@ -179,10 +231,10 @@ def make_program(seed: int, n_bx: int, *, sync_features: bool = False):
             items.append(_break_nested_while(srng))
         if srng.integers(0, 2):
             items.append(Raw([f"WARPSYNC {full}"]))
-        ast = Seq(items)
+        ast = Seq(items + mem_nodes)
         cfg = cfg._replace(mem_size=SYNC_MEM)
     else:
-        ast = Seq(base)
+        ast = Seq(base + mem_nodes)
     try:
         prog = compile_structured(ast, cfg)
     except ValueError:   # BREAK under spill pressure: legitimately rejected

@@ -754,3 +754,206 @@ def test_index_scan_matches_reader_on_degraded_archives(tmp_path):
     # the voided-run cases really happened (the fixtures did their job)
     assert reader.report.corrupt_lines >= 1
     assert reader.report.truncated_runs >= 1
+
+
+# ---------------------------------------------------------------------------
+# incremental tailing (ISSUE 6 satellite): watch must not re-read the archive
+# ---------------------------------------------------------------------------
+
+def test_tailer_unchanged_archive_does_no_rereads(tmp_path):
+    """THE no-re-read regression: polling an unchanged archive opens zero
+    files and reads zero bytes — watch cost is O(appended), not O(archive)."""
+    from repro.archive import ArchiveTailer
+
+    sink = _write_archive(tmp_path, ["hanoi"])
+    assert len(sink.paths) >= 2
+    tailer = ArchiveTailer(str(tmp_path))
+    runs = tailer.poll()
+    assert len(runs) == len(BENCH_NAMES)
+    opened, read = tailer.stats.files_opened, tailer.stats.bytes_read
+    assert opened >= len(sink.paths) and read > 0
+    for _ in range(5):
+        assert tailer.poll() == []
+    assert tailer.stats.files_opened == opened       # never even open()ed
+    assert tailer.stats.bytes_read == read           # zero bytes re-read
+    assert tailer.stats.full_rescans == 0
+    assert tailer.stats.polls == 6
+    assert tailer.report.complete
+
+
+def test_tailer_incremental_append_and_rotation(tmp_path):
+    """Appends — including ones that rotate to a new file — are picked up
+    from per-file offsets without a full rescan, and the tailed runs are
+    bit-equal to a fresh whole-archive read."""
+    from repro.archive import ArchiveTailer
+
+    res = SIM.run(_bench("DIAMOND"), CFG)
+    meta = run_meta("hanoi", as_request(_bench("DIAMOND"), CFG))
+    sink = RotatingJsonlSink(str(tmp_path), max_bytes=4096)
+    feed_result(sink, res, meta)
+    sink.flush()
+
+    tailer = ArchiveTailer(str(tmp_path))
+    assert len(tailer.poll()) == 1
+    for _ in range(6):
+        feed_result(sink, res, meta)
+    sink.flush()
+    new = tailer.poll()
+    assert len(new) == 6
+    assert len(sink.paths) > 1                       # rotation happened...
+    assert tailer.stats.full_rescans == 0            # ...with no rescan
+    assert tailer.poll() == []
+    sink.close()
+
+    fresh = ArchiveReader(str(tmp_path)).runs()
+    assert len(fresh) == 7
+    assert [r.trace for r in new] == [r.trace for r in fresh[1:]]
+    assert tailer.report.complete
+
+
+def test_tailer_buffers_partial_tail_line_until_complete(tmp_path):
+    """An unterminated tail line of the newest file is not consumed (and
+    not damage): the offset stays before it until the writer finishes."""
+    from repro.archive import ArchiveTailer
+
+    sink = _write_archive(tmp_path, ["hanoi"], max_bytes=1 << 20)
+    tailer = ArchiveTailer(str(tmp_path))
+    n = len(tailer.poll())
+    last = sink.paths[-1]
+
+    # hand-append half an event line (a writer mid-flush)
+    whole = '{"event":"begin","mechanism":"hanoi"}\n'
+    with open(last, "a", encoding="utf-8") as fh:
+        fh.write(whole[:14])
+    assert tailer.poll() == []
+    assert not tailer.report.complete                # pending partial line
+    read_before = tailer.stats.bytes_read
+    with open(last, "a", encoding="utf-8") as fh:
+        fh.write(whole[14:])
+    assert tailer.poll() == []                       # begin alone: no run yet
+    # only the delta was read, and the partial prefix only re-read once
+    assert tailer.stats.bytes_read - read_before == len(whole)
+    assert tailer.stats.runs == n
+
+
+def test_tailer_rescans_on_compaction_without_duplicates(tmp_path):
+    """Compaction rewrites files under the tailer: it must detect the
+    invalidated offsets, rescan, and not re-emit already-seen runs."""
+    from repro.archive import ArchiveTailer
+
+    sink = _write_archive(tmp_path, ["hanoi"])
+    # corrupt one mid-run line so compaction has debris to drop (a clean
+    # archive compacts byte-identically -- offsets stay valid, no rescan)
+    first_file = sink.paths[0]
+    lines = open(first_file, encoding="utf-8").read().splitlines(
+        keepends=True)
+    lines[1] = "{not json}\n"
+    open(first_file, "w", encoding="utf-8").writelines(lines)
+
+    tailer = ArchiveTailer(str(tmp_path))
+    first = tailer.poll()
+    assert len(first) == len(BENCH_NAMES) - 1        # one run voided
+    compact(str(tmp_path))                           # drops the debris
+    again = tailer.poll()
+    assert again == []                               # no re-emission
+    assert tailer.stats.full_rescans == 1
+    assert tailer.report.complete
+
+
+def test_watch_uses_tailer_not_full_rewalks(tmp_path):
+    """Replayer.watch is wired through ArchiveTailer: after the initial
+    drain, an idle-timeout watch does zero additional archive reads."""
+    from repro.archive import ArchiveTailer
+    import repro.archive.replay as replay_mod
+
+    _write_archive(tmp_path, ["hanoi"])
+    seen = {}
+    orig_poll = ArchiveTailer.poll
+
+    def counting_poll(self):
+        out = orig_poll(self)
+        seen.setdefault("tailer", self)
+        return out
+
+    ArchiveTailer.poll = counting_poll
+    try:
+        report = Replayer().watch(str(tmp_path), poll_s=0.01,
+                                  idle_timeout_s=0.2)
+    finally:
+        ArchiveTailer.poll = orig_poll
+    assert report.replayed == len(BENCH_NAMES)
+    tailer = seen["tailer"]
+    assert tailer.stats.polls >= 2                   # it did keep polling...
+    assert tailer.stats.bytes_read > 0
+    first_read = tailer.stats.bytes_read
+    # ...but every post-drain poll read zero bytes (cheap stat-only ticks)
+    assert tailer.stats.files_opened <= len(tailer.report.files) + 1
+    assert first_read == sum(os.path.getsize(p) for p in tailer.report.files)
+
+
+# ---------------------------------------------------------------------------
+# offline IPC re-derivation (ISSUE 6): archived cells re-price offline
+# ---------------------------------------------------------------------------
+
+def test_sm_archive_carries_timing_stamp_and_rederives(tmp_path):
+    from repro.archive import TimingRederivation
+
+    sink = RotatingJsonlSink(str(tmp_path))
+    with SimulationService(default_mechanism="hanoi", workers=1,
+                           archive=sink) as svc:
+        sm = svc.submit_sm(_bench("DIAMOND"), CFG, n_warps=3,
+                           inner="hanoi").result()
+    sink.flush()
+    sink.close()
+    reader = ArchiveReader(str(tmp_path))
+    runs = reader.runs()
+    # every warp's begin meta carries the cell's sm_timing stamp
+    for r in runs:
+        stamp = r.meta["sm_timing"]
+        assert stamp["cycles"] == sm.cycles
+        assert stamp["thread_instructions"] == sm.thread_instructions
+        assert stamp["busy_cycles"] == sm.busy_cycles
+        assert (stamp["busy_cycles"] + stamp["scoreboard_stall_cycles"]
+                + stamp["memory_stall_cycles"]) == stamp["cycles"]
+
+    cells = Replayer().rederive_timing(reader)
+    assert len(cells) == 1
+    td = cells[0]
+    assert isinstance(td, TimingRederivation)
+    assert td.n_warps == 3 and td.policy == "round_robin"
+    # default config == live config: the re-derivation matches the stamp
+    assert td.matches_archive
+    assert td.result.cycles == sm.cycles
+    assert td.result.thread_instructions == sm.thread_instructions
+    assert td.ipc == pytest.approx(sm.ipc)
+
+    # offline what-if: re-price under different latencies -> same work,
+    # different cycles, stamp no longer matches
+    from repro.core.timing import TimingConfig
+    slow = Replayer().rederive_timing(
+        reader, timing_cfg=TimingConfig(alu_latency=50, control_latency=50,
+                                        memory_latency=300,
+                                        atomic_latency=300))[0]
+    assert slow.result.thread_instructions == sm.thread_instructions
+    assert slow.result.cycles > sm.cycles
+    assert not slow.matches_archive
+
+
+def test_cli_rederive_timing(tmp_path, capsys):
+    from repro.archive.__main__ import main
+
+    sink = RotatingJsonlSink(str(tmp_path))
+    with SimulationService(default_mechanism="hanoi", workers=1,
+                           archive=sink) as svc:
+        svc.submit_sm(_bench("DIAMOND"), CFG, n_warps=2,
+                      inner="hanoi").result()
+    sink.flush()
+    sink.close()
+    assert main([str(tmp_path), "--rederive-timing"]) == 0
+    out = capsys.readouterr().out
+    assert "[timing] cell" in out and "stamp=match" in out
+
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main([str(empty), "--rederive-timing"]) == 0
+    assert "no SM cells" in capsys.readouterr().out

@@ -1,0 +1,467 @@
+"""Event-driven cycle-accurate timing engine (ISSUE 6).
+
+Acceptance contract:
+
+* **differential gate** — the cycle engine in trace-conservative,
+  single-issue, fixed-latency mode reproduces the historical uniform-cost
+  loop (kept verbatim as ``schedule_traces_reference``) **bit-for-bit**:
+  same issue order, same cycle count, same thread-instruction total, over
+  the paper suite and the progen distribution, for every policy;
+* the cycle model is deterministic for a fixed seed (memory-latency
+  distributions draw from a seeded rng in issue order);
+* ``ipc_delta`` is exactly 0.0 on self-comparison and sign-antisymmetric;
+* zero-instruction schedules report 0.0 ratios, never ZeroDivisionError —
+  across ``TimingResult``, ``CycleResult`` and ``SmResult``;
+* ``sm_interleave``'s policies are the shared :mod:`repro.timing.policies`
+  layer: non-uniform latencies change *timing only* — warp traces are
+  bit-identical (conformance is latency-independent);
+* ``Simulator.compare(timing="cycle")`` reports the Fig 10 IPC delta with
+  per-schedule stall breakdowns in ``report.timing_results``.
+"""
+import numpy as np
+import pytest
+
+# compat shim: without hypothesis only the @given tests skip, the
+# example-based ones still run
+from tests.hypothesis_compat import given, settings, st
+from tests.progen import BASE_CFG, make_program
+
+from repro.core import MachineConfig
+from repro.core.programs import make_suite
+from repro.core.timing import (TimingConfig, TimingResult, ipc_delta,
+                               schedule_traces, schedule_traces_reference,
+                               simulate)
+from repro.engine import Simulator
+from repro.engine.mechanisms.sm import SM_POLICIES, interleave_cycle
+from repro.timing import (POLICY_NAMES, CycleConfig, CycleResult, Delay,
+                          EventQueue, Scheduler, Signal, get_policy,
+                          instr_deps, resolve_policy_name, schedule_cycle,
+                          simulate_cycle)
+from repro.timing.policies import GreedyThenOldest, OldestFirst, RoundRobin
+
+CFG = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+SUITE = make_suite(CFG, datasets=1)
+SIM = Simulator("hanoi")
+
+# the differential corpus: suite benches + progen (incl. the
+# memory-latency-heavy shapes), traced under two mechanisms so the warp
+# sets mix schedules of the same program
+_DIFF_SEEDS = range(12)
+
+
+def _trace(bench_or_prog, cfg=CFG, mech="hanoi", mem=None):
+    r = SIM.run(bench_or_prog, cfg, mechanism=mech, init_mem=mem)
+    return list(r.trace)
+
+
+def _corpus():
+    """(traces, programs) warp sets: heterogeneous programs per set."""
+    sets = []
+    for b in SUITE[:4]:
+        prog = np.asarray(b.program)
+        tr = [_trace(b, mech="hanoi"), _trace(b, mech="simt_stack")]
+        sets.append((tr, [prog, prog]))
+    pool = []
+    for seed in _DIFF_SEEDS:
+        out, cfg = make_program(seed, 8, mem_features=(seed % 2 == 0))
+        if out is None:
+            continue
+        prog, mem = out
+        pool.append((_trace(prog, cfg, "simt_stack", mem), np.asarray(prog)))
+    for i in range(0, len(pool) - 2, 3):
+        chunk = pool[i:i + 3]
+        sets.append(([t for t, _ in chunk], [p for _, p in chunk]))
+    return sets
+
+
+# ---------------------------------------------------------------------------
+# events.py: queue + coroutine scheduler
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_fifo():
+    q = EventQueue()
+    q.push(5, "a")
+    q.push(2, "b")
+    q.push(5, "c")
+    q.push(2, "d")
+    assert len(q) == 4 and bool(q)
+    assert q.peek_time() == 2
+    # same-time entries pop in insertion order (stable ties)
+    assert q.pop() == (2, "b")
+    assert q.pop() == (2, "d")
+    assert list(q.pop_until(5)) == ["a", "c"]     # payloads, time-ordered
+    assert not q
+
+
+def test_scheduler_delay_signal_completion_times():
+    sched = Scheduler()
+    done = {}
+
+    def worker(name, wait):
+        yield Delay(wait)
+        done[name] = sched.now
+
+    sig = Signal()
+
+    def producer():
+        yield Delay(3)
+        sig.fire(sched)
+
+    def consumer():
+        yield sig
+        done["consumer"] = sched.now
+
+    sched.spawn(worker("fast", 2))
+    sched.spawn(worker("slow", 7))
+    sched.spawn(producer())
+    sched.spawn(consumer())
+    sched.run()
+    assert done == {"fast": 2, "consumer": 3, "slow": 7}
+
+
+def test_scheduler_parked_process_does_not_hang_run():
+    """A process parked on a signal nobody fires must not keep run() alive."""
+    sched = Scheduler()
+    never = Signal()
+
+    def parked():
+        yield never
+        raise AssertionError("unreachable")
+
+    def active():
+        yield Delay(4)
+
+    sched.spawn(parked())
+    sched.spawn(active())
+    sched.run()
+    assert sched.now == 4
+
+
+# ---------------------------------------------------------------------------
+# policies: the shared arbitration layer
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_and_aliases():
+    assert POLICY_NAMES == ("greedy_then_oldest", "round_robin",
+                            "oldest_first")
+    assert SM_POLICIES == POLICY_NAMES          # ONE policy layer
+    assert resolve_policy_name("gto") == "greedy_then_oldest"
+    assert resolve_policy_name("round_robin") == "round_robin"
+    with pytest.raises(ValueError, match="unknown issue policy"):
+        resolve_policy_name("fifo")
+    assert isinstance(get_policy("gto", 4), GreedyThenOldest)
+    assert isinstance(get_policy("oldest_first", 4), OldestFirst)
+
+
+def test_gto_stickiness_and_stalled_reset():
+    p = GreedyThenOldest(4)
+    assert p.select([1, 2, 3]) == 1      # initial cur=0 not ready -> oldest
+    p.issued(2)
+    assert p.select([1, 2, 3]) == 2      # greedy on the granted warp
+    assert p.select([0, 1, 3]) == 0      # granted warp gone -> oldest
+    p.issued(2)
+    p.stalled()                          # idle gap clears the stickiness
+    assert p.select([1, 2, 3]) == 1      # oldest, NOT the old greedy warp
+
+
+def test_round_robin_rotates():
+    p = RoundRobin(4)
+    order = []
+    for _ in range(6):
+        w = p.select([0, 1, 2, 3])
+        p.issued(w)
+        order.append(w)
+    assert order == [0, 1, 2, 3, 0, 1]
+    p2 = RoundRobin(4)
+    p2.issued(1)
+    assert p2.select([0, 3]) == 3        # closest at/after the cursor
+
+
+# ---------------------------------------------------------------------------
+# THE differential gate: cycle engine (unit mode) == legacy loop, bit-for-bit
+# ---------------------------------------------------------------------------
+
+# the historical loop implements exactly these two; ``oldest_first`` is
+# new with the cycle engine (covered by the policy unit tests above)
+@pytest.mark.parametrize("policy", ["greedy_then_oldest", "round_robin"])
+def test_unit_latency_matches_reference_bit_for_bit(policy):
+    cfgs = [TimingConfig(),
+            TimingConfig(alu_latency=1, control_latency=1,
+                         memory_latency=1, atomic_latency=1),
+            TimingConfig(alu_latency=3, control_latency=2,
+                         memory_latency=11, atomic_latency=17)]
+    cases = 0
+    for traces, progs in _corpus():
+        ops = [p[:, 0] for p in progs]
+        for cfg in cfgs:
+            ref = schedule_traces_reference(traces, ops, policy, cfg)
+            got = schedule_traces(traces, ops, policy, cfg)
+            assert got == ref            # (order, cycles, tinstr) identical
+            # full row tables route through the same path
+            assert schedule_traces(traces, progs, policy, cfg) == ref
+            cases += 1
+    assert cases >= 15
+
+
+def test_shim_simulate_matches_reference_ipc():
+    b = SUITE[0]
+    tr = _trace(b)
+    prog = np.asarray(b.program)
+    res = simulate([tr, tr], prog, CFG.n_threads)
+    order, cycles, tinstr = schedule_traces_reference(
+        [tr, tr], [prog[:, 0]] * 2)
+    assert (res.cycles, res.issues, res.thread_instructions) == \
+        (cycles, len(order), tinstr)
+    assert res.warp_width == CFG.n_threads
+    # the shim's result additionally partitions every cycle
+    assert res.cycles == res.busy_cycles + res.scoreboard_stall_cycles + \
+        res.memory_stall_cycles
+
+
+# ---------------------------------------------------------------------------
+# cycle-model properties: determinism, stall partition, scoreboard, dual issue
+# ---------------------------------------------------------------------------
+
+def _mem_case(seed=3):
+    out, cfg = make_program(seed, 8, mem_features=True)
+    assert out is not None
+    prog, mem = out
+    return _trace(prog, cfg, "simt_stack", mem), np.asarray(prog), cfg
+
+
+def test_cycle_model_deterministic_for_fixed_seed():
+    tr, prog, cfg = _mem_case()
+    for model in ("uniform", "bimodal"):
+        ccfg = CycleConfig(memory_model=model, seed=11, scoreboard=True)
+        a = schedule_cycle([tr, tr, tr], [prog] * 3, "greedy_then_oldest",
+                           ccfg)
+        b = schedule_cycle([tr, tr, tr], [prog] * 3, "greedy_then_oldest",
+                           ccfg)
+        assert a == b                    # dataclass equality: every field
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       model=st.sampled_from(["fixed", "uniform", "bimodal"]),
+       policy=st.sampled_from(["greedy_then_oldest", "round_robin"]))
+def test_cycle_model_deterministic_property(seed, model, policy):
+    tr, prog, _ = _mem_case()
+    ccfg = CycleConfig(memory_model=model, seed=seed, scoreboard=True)
+    a = schedule_cycle([tr, tr], [prog] * 2, policy, ccfg)
+    b = schedule_cycle([tr, tr], [prog] * 2, policy, ccfg)
+    assert a == b
+
+
+def test_stall_partition_invariant():
+    """Every cycle is busy, scoreboard-stalled, or memory-stalled — no
+    unaccounted time, in every mode."""
+    tr, prog, _ = _mem_case()
+    for ccfg in (CycleConfig(),
+                 CycleConfig(scoreboard=False),
+                 CycleConfig(memory_model="bimodal", seed=5),
+                 CycleConfig(issue_width=2),
+                 CycleConfig(memory_latency=200)):
+        for n in (1, 3):
+            res = schedule_cycle([tr] * n, [prog] * n, "greedy_then_oldest",
+                                 ccfg)
+            assert res.cycles == (res.busy_cycles +
+                                  res.scoreboard_stall_cycles +
+                                  res.memory_stall_cycles)
+            assert res.issues == len(res.order) == sum(res.per_warp_issues)
+
+
+def test_memory_stalls_dominate_on_load_chains():
+    """The progen mem_features shape exists to exercise exactly this:
+    a long-latency load feeding a dependent chain must show up as memory
+    stall cycles, and raising the latency must raise the cycle count."""
+    tr, prog, _ = _mem_case()
+    short = schedule_cycle([tr], [prog], "greedy_then_oldest",
+                           CycleConfig(memory_latency=10))
+    long = schedule_cycle([tr], [prog], "greedy_then_oldest",
+                          CycleConfig(memory_latency=100))
+    assert long.memory_stall_cycles > short.memory_stall_cycles
+    assert long.cycles > short.cycles
+    assert long.thread_instructions == short.thread_instructions
+
+
+def test_scoreboard_never_slower_than_trace_conservative():
+    """The scoreboard only *relaxes* the everything-depends-on-predecessor
+    assumption; with identical latencies it cannot add cycles."""
+    for traces, progs in _corpus()[:6]:
+        base = CycleConfig(scoreboard=False)
+        sb = CycleConfig(scoreboard=True)
+        a = schedule_cycle(traces, progs, "greedy_then_oldest", base)
+        b = schedule_cycle(traces, progs, "greedy_then_oldest", sb)
+        assert b.cycles <= a.cycles
+        assert b.thread_instructions == a.thread_instructions
+
+
+def test_dual_issue_never_slower_and_helps_multiwarp():
+    tr, prog, _ = _mem_case()
+    one = schedule_cycle([tr] * 4, [prog] * 4, "greedy_then_oldest",
+                         CycleConfig(issue_width=1))
+    two = schedule_cycle([tr] * 4, [prog] * 4, "greedy_then_oldest",
+                         CycleConfig(issue_width=2))
+    assert two.cycles < one.cycles       # 4 identical warps: must overlap
+    assert two.thread_instructions == one.thread_instructions
+
+
+def test_memory_distribution_bounds():
+    tr, prog, _ = _mem_case()
+    lo, hi = 10, 60
+    fixed = schedule_cycle([tr], [prog], "greedy_then_oldest",
+                           CycleConfig(memory_latency=lo, scoreboard=False))
+    slow = schedule_cycle([tr], [prog], "greedy_then_oldest",
+                          CycleConfig(memory_latency=hi, scoreboard=False))
+    uni = schedule_cycle([tr], [prog], "greedy_then_oldest",
+                         CycleConfig(memory_model="uniform",
+                                     memory_latency_lo=lo,
+                                     memory_latency_hi=hi,
+                                     scoreboard=False, seed=7))
+    assert fixed.cycles <= uni.cycles <= slow.cycles
+
+
+def test_cycle_config_validation():
+    with pytest.raises(ValueError):
+        CycleConfig(memory_model="gaussian")
+    with pytest.raises(ValueError):
+        CycleConfig(issue_width=0)
+    with pytest.raises(ValueError):
+        CycleConfig(memory_latency_lo=50, memory_latency_hi=10,
+                    memory_model="uniform")
+    # a CycleConfig passes through from_timing untouched (explicit config
+    # wins over compare's scoreboard lift)
+    c = CycleConfig(scoreboard=False, issue_width=2)
+    assert CycleConfig.from_timing(c, scoreboard=True) is c
+    t = CycleConfig.from_timing(TimingConfig(alu_latency=5))
+    assert t.alu_latency == 5 and t.scoreboard is False
+
+
+def test_instr_deps_isetp_and_memory_rows():
+    from repro.core.asm import assemble
+    prog = assemble("LDG R5, [R1+0]\nISETP.LT P1, R5, 3\n"
+                    "@P1 IADD R6, R5, R2\nEXIT")
+    reads, writes, preads, pwrites = instr_deps(np.asarray(prog)[0])
+    assert reads == (1,) and writes == (5,)
+    reads, writes, preads, pwrites = instr_deps(np.asarray(prog)[1])
+    assert 5 in reads and not writes and pwrites == (1,)
+    reads, writes, preads, pwrites = instr_deps(np.asarray(prog)[2])
+    assert set(reads) == {5, 2} and writes == (6,) and preads == (1,)
+
+
+# ---------------------------------------------------------------------------
+# zero-instruction guards + ipc_delta algebra (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_zero_instruction_schedule_reports_zero_ratios():
+    empty = simulate([], np.zeros((1, 8), dtype=np.int32), 8)
+    assert empty.cycles == 0 and empty.issues == 0
+    assert empty.ipc == 0.0
+    assert empty.warp_ipc == 0.0
+    assert empty.simd_utilization == 0.0
+    legacy = TimingResult(cycles=0, issues=0, thread_instructions=0,
+                          warp_width=0)
+    assert (legacy.ipc, legacy.warp_ipc, legacy.simd_utilization) == \
+        (0.0, 0.0, 0.0)
+    cyc = schedule_cycle([[]], [np.zeros((1, 8), dtype=np.int32)],
+                         "greedy_then_oldest", CycleConfig())
+    assert cyc.cycles == 0
+    assert (cyc.ipc, cyc.warp_ipc, cyc.simd_utilization) == (0.0, 0.0, 0.0)
+    # engine-level twin (SmResult) guards the same ratios
+    from repro.engine.types import SimStatus, SmResult
+    sm = SmResult(mechanism="sm_interleave", inner="hanoi",
+                  policy="round_robin", warps=(), sm_trace=(),
+                  status=SimStatus.OK, steps=0, cycles=0,
+                  thread_instructions=0, utilization=0.0)
+    assert sm.ipc == 0.0 and sm.warp_ipc == 0.0
+
+
+def test_ipc_delta_zero_on_self_and_antisymmetric():
+    b = SUITE[0]
+    tr = _trace(b)
+    prog = np.asarray(b.program)
+    a = simulate([tr, tr], prog, CFG.n_threads)
+    assert ipc_delta(a, a) == 0.0
+    faster = simulate([tr], prog, CFG.n_threads)
+    if faster.ipc != a.ipc:
+        assert np.sign(ipc_delta(faster, a)) == -np.sign(ipc_delta(a, faster))
+    # exact antisymmetry of the numerator: delta(a,b)*b.ipc == -delta(b,a)*a.ipc
+    d_ab = ipc_delta(faster, a) * a.ipc
+    d_ba = ipc_delta(a, faster) * faster.ipc
+    assert d_ab == pytest.approx(-d_ba)
+
+
+# ---------------------------------------------------------------------------
+# integration: compare(timing="cycle"), shared-policy SM conformance, service
+# ---------------------------------------------------------------------------
+
+def test_compare_timing_cycle_reports_fig10_delta():
+    benches = [b for b in SUITE if b.name in ("HOTS0", "DIAMOND")]
+    rep = SIM.compare(["hanoi", "simt_stack"], benches, CFG, timing="cycle")
+    assert rep.rows
+    for row in rep.rows:
+        assert np.isfinite(row.ipc_delta)
+    # per-schedule stall breakdowns land in timing_results
+    assert rep.timing_results
+    for (prog, mech), tres in rep.timing_results.items():
+        assert isinstance(prog, str) and mech in ("hanoi", "simt_stack")
+        assert tres.cycles == (tres.busy_cycles +
+                               tres.scoreboard_stall_cycles +
+                               tres.memory_stall_cycles)
+        assert tres.ipc > 0.0
+    # self-pairs are exactly zero through the cache
+    rep_self = SIM.compare(["hanoi"], benches, CFG,
+                           pairs=[("hanoi", "hanoi")], timing="cycle")
+    assert all(r.ipc_delta == 0.0 for r in rep_self.rows)
+
+
+def test_compare_trace_and_cycle_modes_differ_only_in_timing():
+    benches = [b for b in SUITE if b.name == "DIAMOND"]
+    a = SIM.compare(["hanoi", "simt_stack"], benches, CFG, timing="trace")
+    b = SIM.compare(["hanoi", "simt_stack"], benches, CFG, timing="cycle")
+    for ra, rb in zip(a.rows, b.rows):
+        assert ra.discrepancy == rb.discrepancy      # Fig 9 is timing-free
+
+
+def test_sm_interleave_conformant_under_nonuniform_latencies():
+    """Acceptance: sm_interleave through the shared policy layer stays
+    trace-conformant when latencies change — only timing moves."""
+    b = SUITE[0]
+    base = SIM.run_sm(b, CFG, n_warps=3, policy="greedy_then_oldest")
+    slow = SIM.run_sm(b, CFG, n_warps=3, policy="greedy_then_oldest",
+                      timing_cfg=TimingConfig(memory_latency=300,
+                                              alu_latency=7))
+    cyc = SIM.run_sm(b, CFG, n_warps=3, policy="gto",
+                     timing_cfg=CycleConfig(memory_latency=300))
+    for w_base, w_slow, w_cyc in zip(base.warps, slow.warps, cyc.warps):
+        assert w_base.trace == w_slow.trace == w_cyc.trace
+    assert slow.cycles > base.cycles
+    assert cyc.policy == base.policy == "greedy_then_oldest"   # canonical
+    assert base.cycles == (base.busy_cycles + base.scoreboard_stall_cycles +
+                           base.memory_stall_cycles)
+    assert base.stall_breakdown.keys() == {"issue", "scoreboard", "memory"}
+
+
+def test_interleave_cycle_policy_alias_and_result_shape():
+    b = SUITE[0]
+    tr = _trace(b)
+    prog = np.asarray(b.program)
+    res = interleave_cycle([tr, tr], [prog, prog], "gto", TimingConfig())
+    assert isinstance(res, CycleResult)
+    assert res.policy == "greedy_then_oldest"
+    legacy = schedule_traces_reference([tr, tr], [prog[:, 0]] * 2)
+    assert (res.order, res.cycles, res.thread_instructions) == legacy
+
+
+def test_service_accumulates_sm_stall_counters():
+    from repro.service import SimulationService
+    b = SUITE[0]
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        sm = svc.submit_sm(b, CFG, n_warps=3, inner="hanoi").result()
+        stats = svc.stats()
+    assert stats.sm_cycles == sm.cycles > 0
+    assert stats.sm_busy_cycles == sm.busy_cycles
+    assert stats.sm_cycles == (stats.sm_busy_cycles +
+                               stats.sm_scoreboard_stall_cycles +
+                               stats.sm_memory_stall_cycles)
+    assert stats.sm_stall_breakdown == sm.stall_breakdown
