@@ -532,9 +532,10 @@ def run_warps_jax(program: np.ndarray, cfg: MachineConfig,
 
 def state_trace(st: HanoiState) -> list[tuple[int, int]]:
     n = int(st.trace_n)
-    return [(int(p), int(m))
-            for p, m in zip(np.asarray(st.trace_pc[:n]),
-                            np.asarray(st.trace_mask[:n]))]
+    # .tolist() gives native ints in one C pass — per-element int() casts
+    # dominated batched result assembly at scale
+    return list(zip(np.asarray(st.trace_pc[:n]).tolist(),
+                    np.asarray(st.trace_mask[:n]).tolist()))
 
 
 def state_deadlocked(st: HanoiState, cfg: MachineConfig) -> bool:

@@ -132,7 +132,9 @@ def padded_len(n: int) -> int:
     return -(-n // PAD_QUANTUM) * PAD_QUANTUM
 
 
-def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
+def _jax_result(req: SimRequest, state, wall_time_s: float,
+                mechanism: str = "hanoi_jax",
+                meta: "dict | None" = None) -> SimResult:
     from repro.core.hanoi import ERR_NO_FREE_BX, state_trace
     cfg = req.resolved_cfg()
     err_flags = int(state.error)
@@ -141,7 +143,7 @@ def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
     trace = tuple(state_trace(state)) if req.record_trace else ()
     fuel_left = int(state.fuel)
     return SimResult(
-        mechanism="hanoi_jax",
+        mechanism=mechanism,
         status=classify_status(finished=int(state.finished),
                                full_mask=cfg.full_mask,
                                fuel_left=fuel_left, error=error),
@@ -149,7 +151,7 @@ def _jax_result(req: SimRequest, state, wall_time_s: float) -> SimResult:
         mem=np.asarray(state.mem), finished=int(state.finished),
         steps=int(state.steps), fuel_left=fuel_left, trace=trace,
         utilization=simd_utilization(list(trace), cfg.n_threads),
-        error=error, wall_time_s=wall_time_s)
+        error=error, wall_time_s=wall_time_s, meta=meta or {})
 
 
 @functools.lru_cache(maxsize=None)
@@ -171,26 +173,18 @@ def _jitted_batch_runner(cfg, majority_first: bool):
     return jax.jit(jax.vmap(one))
 
 
-def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
-    """Native batched execution: vmap over warps AND over (padded) programs.
-
-    All requests must share cfg / majority_first / active0=None (the
-    planner's execution signature guarantees it before dispatching here).
-    Programs of different lengths are padded with unreachable EXITs to one
-    shape so a single compiled executable serves the whole batch.
-    """
-    import jax
-    import jax.numpy as jnp
+def _batch_arrays(reqs: Sequence[SimRequest], cfg, pad_len: int
+                  ) -> tuple[np.ndarray, ...]:
+    """``(progs, skips, regs, mems, lanes)`` operand arrays for one
+    signature-homogeneous batch, programs padded with unreachable EXITs to
+    ``pad_len``.  Shared by the hanoi_jax batch runner and the sm_jax
+    per-warp phase."""
     from repro.core.isa import Op
 
-    cfg = reqs[0].resolved_cfg()
-    majority_first = reqs[0].majority_first
     W = cfg.n_threads
-    L = padded_len(max(int(np.asarray(r.program).shape[0]) for r in reqs))
-
-    progs = np.zeros((len(reqs), L, 8), np.int32)
+    progs = np.zeros((len(reqs), pad_len, 8), np.int32)
     progs[:, :, 0] = int(Op.EXIT)                      # unreachable pad
-    skips = np.zeros((len(reqs), L), bool)             # hanoi: no oracle skips
+    skips = np.zeros((len(reqs), pad_len), bool)       # hanoi: no oracle skips
     regs = np.zeros((len(reqs), W, cfg.n_regs), np.int32)
     mems = np.zeros((len(reqs), cfg.mem_size), np.int32)
     lanes = np.broadcast_to(np.arange(W, dtype=np.int32),
@@ -204,17 +198,79 @@ def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
             mems[i] = np.asarray(r.init_mem, np.int32).reshape(cfg.mem_size)
         if r.lane_ids is not None:
             lanes[i] = np.asarray(r.lane_ids, np.int32).reshape(W)
+    return progs, skips, regs, mems, lanes
 
-    run_batched = _jitted_batch_runner(cfg, majority_first)
+
+# AOT-compiled executables keyed by (cfg, majority_first, batch, pad_len).
+# Compilation happens exactly once per key, *outside* any request's timed
+# window — first-call compile latency used to be amortized into the batch's
+# per-request wall times, poisoning ServiceStats p50/p99 and bench numbers.
+_COMPILED_BATCH: dict = {}
+
+
+def _compiled_batch_exec(cfg, majority_first: bool, batch: int, pad_len: int):
+    """``(compiled executable, fresh compile seconds | None)`` for one
+    (cfg, majority_first, batch-size, padding-class) shape signature.
+
+    Uses the AOT path (``jit(...).lower(...).compile()``) so trace+compile
+    time is measured separately from execution; a cache hit returns
+    ``None`` for the compile time.
+    """
+    key = (cfg, bool(majority_first), int(batch), int(pad_len))
+    hit = _COMPILED_BATCH.get(key)
+    if hit is not None:
+        return hit, None
+    import jax
+    import jax.numpy as jnp
+
+    W = cfg.n_threads
+    sds = jax.ShapeDtypeStruct
     t0 = time.perf_counter()
-    states = run_batched(jnp.asarray(progs), jnp.asarray(skips),
-                         jnp.asarray(regs), jnp.asarray(mems),
-                         jnp.asarray(lanes))
+    compiled = _jitted_batch_runner(cfg, majority_first).lower(
+        sds((batch, pad_len, 8), jnp.int32),
+        sds((batch, pad_len), jnp.bool_),
+        sds((batch, W, cfg.n_regs), jnp.int32),
+        sds((batch, cfg.mem_size), jnp.int32),
+        sds((batch, W), jnp.int32)).compile()
+    compile_s = time.perf_counter() - t0
+    _COMPILED_BATCH[key] = compiled
+    return compiled, compile_s
+
+
+def _run_hanoi_jax_batch(reqs: Sequence[SimRequest]) -> list[SimResult]:
+    """Native batched execution: vmap over warps AND over (padded) programs.
+
+    All requests must share cfg / majority_first / active0=None (the
+    planner's execution signature guarantees it before dispatching here).
+    Programs of different lengths are padded with unreachable EXITs to one
+    shape so a single compiled executable serves the whole batch.
+
+    Wall-time accounting: ``wall_time_s`` is execution-only, amortized per
+    request.  A fresh XLA compile (first batch per shape signature) is
+    measured separately and stamped as ``meta["compile_time_s"]`` on that
+    batch's results — it never inflates latency percentiles.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    cfg = reqs[0].resolved_cfg()
+    majority_first = reqs[0].majority_first
+    L = padded_len(max(int(np.asarray(r.program).shape[0]) for r in reqs))
+    progs, skips, regs, mems, lanes = _batch_arrays(reqs, cfg, L)
+
+    compiled, compile_s = _compiled_batch_exec(cfg, majority_first,
+                                               len(reqs), L)
+    t0 = time.perf_counter()
+    states = compiled(jnp.asarray(progs), jnp.asarray(skips),
+                      jnp.asarray(regs), jnp.asarray(mems),
+                      jnp.asarray(lanes))
     jax.block_until_ready(states.regs)
     wall = (time.perf_counter() - t0) / max(1, len(reqs))
+    meta = {"compile_time_s": compile_s} if compile_s is not None else None
     per_warp = [jax.tree_util.tree_map(lambda x, i=i: x[i], states)
                 for i in range(len(reqs))]
-    return [_jax_result(r, st, wall) for r, st in zip(reqs, per_warp)]
+    return [_jax_result(r, st, wall, meta=meta)
+            for r, st in zip(reqs, per_warp)]
 
 
 @register_mechanism(

@@ -8,16 +8,22 @@ Each submodule registers one mechanism with the
   optimizer with a forward-progress guarantee);
 * :mod:`.sm`     — ``sm_interleave``: a per-SM model that time-multiplexes
   N warps through any registered single-warp mechanism under a pluggable
-  warp-scheduler policy.
+  warp-scheduler policy;
+* :mod:`.sm_jax` — ``sm_jax``: the same SM model as one ``jit(vmap)``
+  lane-parallel program (warps on the cached hanoi batch executable, the
+  issue policy as an argmin over a priority vector), SM traces
+  bit-identical to ``sm_interleave``.
 
-Importing this package (done by ``repro.engine``) registers both.
+Importing this package (done by ``repro.engine``) registers all of them.
 """
-from . import volta, sm  # noqa: F401  (import side effect: registration)
+from . import volta, sm, sm_jax  # noqa: F401  (import side effect:
+#                                  registration)
 
 from .sm import (SM_POLICIES, build_sm_result, interleave_cycle,  # noqa: F401
                  interleave_traces)
+from .sm_jax import run_cells  # noqa: F401
 from .volta import run_volta_itps  # noqa: F401
 
 __all__ = ["SM_POLICIES", "build_sm_result", "interleave_cycle",
-           "interleave_traces",
+           "interleave_traces", "run_cells",
            "run_volta_itps"]

@@ -117,14 +117,59 @@ def build_sm_result(reqs: Sequence[SimRequest],
         memory_stall_cycles=sched.memory_stall_cycles)
 
 
+def _sequence_len(programs) -> "int | None":
+    """``len()`` of a *sequence of programs*, or ``None`` for one program.
+
+    A single program is a 2-D instruction-row table (any ndarray of
+    ``ndim != 3``), a ``Benchmark`` duck-type, or a ``SimRequest``; a
+    sequence is a list/tuple, a 3-D ndarray of stacked row tables, or any
+    other sized container.  Unsized iterables (generators) raise instead of
+    silently desynchronizing the façade's cell width from the service's
+    per-warp stats accounting.
+    """
+    if isinstance(programs, (list, tuple)):
+        return len(programs)
+    if isinstance(programs, np.ndarray):
+        return int(programs.shape[0]) if programs.ndim == 3 else None
+    if hasattr(programs, "program"):     # SimRequest / Benchmark duck-type
+        return None
+    if isinstance(programs, (str, bytes)):
+        raise TypeError("programs must be a program or a sequence of "
+                        f"programs, not {type(programs).__name__}")
+    if hasattr(programs, "__len__"):
+        return len(programs)
+    if hasattr(programs, "__iter__"):
+        raise TypeError(
+            "programs must be a single program or a *sized* sequence of "
+            "programs; got an unsized iterable — materialize it as a list")
+    return None
+
+
 def warp_count(programs, n_warps: "int | None") -> int:
     """Cell width for ``run_sm``/``submit_sm`` arguments — the ONE
     derivation both the façade and the service's warp-level stats use:
-    one warp per entry of a program sequence, else ``n_warps``
+    one warp per entry of a program sequence (any sized sequence, including
+    a 3-D ndarray of stacked programs), else ``n_warps``
     (default :data:`DEFAULT_WARPS`)."""
-    if isinstance(programs, (list, tuple)):
-        return len(programs)
+    n = _sequence_len(programs)
+    if n is not None:
+        return n
     return DEFAULT_WARPS if n_warps is None else int(n_warps)
+
+
+def per_warp_programs(programs, n_warps: "int | None") -> list:
+    """Normalize ``run_sm``/``submit_sm`` ``programs`` into one entry per
+    warp, consistently with :func:`warp_count` (a conflict between an
+    explicit ``n_warps`` and a sequence's own length is an error)."""
+    n = _sequence_len(programs)
+    if n is None:
+        return [programs] * warp_count(programs, n_warps)
+    if n_warps is not None and int(n_warps) != n:
+        raise ValueError(f"n_warps={n_warps} conflicts with {n} "
+                         f"per-warp programs")
+    if isinstance(programs, np.ndarray):
+        return [programs[i] for i in range(n)]
+    return list(programs)
 
 
 def _sm_options(req: SimRequest) -> tuple[int, str, str]:
@@ -145,16 +190,21 @@ def _sm_options(req: SimRequest) -> tuple[int, str, str]:
 def _run_sm_interleave(req: SimRequest) -> SimResult:
     n_warps, inner_name, policy = _sm_options(req)
     inner = get_mechanism(inner_name)
-    if inner.name == "sm_interleave":
+    if "composite" in inner.tags or inner.name == "sm_interleave":
         raise ValueError("sm_inner must be a single-warp mechanism, "
-                         "not sm_interleave itself")
+                         f"not the composite {inner.name!r}")
     stripped = {k: v for k, v in req.meta.items()
                 if not k.startswith("sm_")}
     t0 = time.perf_counter()
     reqs = [dataclasses.replace(req, meta=stripped,
                                 name=f"{req.name or 'warp'}/w{w}")
             for w in range(n_warps)]
-    results = [inner(q) for q in reqs]
+    # dispatch the warps through the shared planner, not a serial Python
+    # loop: an inner mechanism with a native batch_runner (sm_inner=
+    # "hanoi_jax") executes the whole homogeneous cell as ONE cached
+    # jit(vmap) batch call
+    from repro.service.planner import execute_plan   # lazy: no import cycle
+    results = execute_plan(inner, reqs)
     sm = build_sm_result(reqs, results, inner=inner.name, policy=policy,
                          wall_time_s=time.perf_counter() - t0)
     w0 = results[0]
@@ -170,4 +220,4 @@ def _run_sm_interleave(req: SimRequest) -> SimResult:
 
 __all__ = ["SM_POLICIES", "DEFAULT_WARPS", "DEFAULT_INNER", "DEFAULT_POLICY",
            "interleave_cycle", "interleave_traces", "build_sm_result",
-           "warp_count"]
+           "warp_count", "per_warp_programs"]

@@ -199,20 +199,29 @@ class Simulator:
                inner: str | None = None,
                policy: str = "round_robin",
                timing_cfg: "TimingConfig | object" = TimingConfig(),
+               sm_mechanism: str = "sm_interleave",
                sink: TraceSink | None = None,
                **request_kw) -> SmResult:
         """Run N warps on one SM through a single-warp mechanism.
 
         ``programs`` is either one program (replicated across ``n_warps``
         identical warps, default 4) or a sequence with one entry per warp
-        (heterogeneous SMs — different programs and/or memory images).
+        (heterogeneous SMs — different programs and/or memory images; any
+        sized sequence works, including a 3-D ndarray of stacked programs).
         Each warp executes under ``inner`` (default: this Simulator's
-        mechanism, or ``hanoi`` if that is ``sm_interleave``), then the
-        per-warp traces are time-multiplexed through the SM issue scheduler
-        under ``policy`` (``round_robin`` / ``greedy_then_oldest``).  The
-        returned :class:`~repro.engine.types.SmResult` carries the per-warp
+        mechanism, or ``hanoi`` if that is a composite SM mechanism), then
+        the per-warp traces are time-multiplexed through the SM issue
+        scheduler under ``policy`` (``round_robin`` /
+        ``greedy_then_oldest`` / ``oldest_first``).  The returned
+        :class:`~repro.engine.types.SmResult` carries the per-warp
         ``SimResult``s (and their ``SimRequest``s) plus the interleaved
         ``(warp, pc, mask)`` SM trace and its latency-aware cycle count.
+
+        ``sm_mechanism`` selects the SM engine: ``"sm_interleave"``
+        (default — Python scheduler, any single-warp ``inner``) or
+        ``"sm_jax"`` (the whole cell as one ``jit(vmap)`` lane-parallel
+        program, bit-identical traces, ``inner`` limited to the hanoi
+        engines).
 
         A sink receives each warp as one normalized run whose begin event
         is the SM variant of the replay meta
@@ -220,39 +229,42 @@ class Simulator:
         policy, cell id, full replay payload) — SM-cell archives replay
         offline exactly like single-warp ones.
         """
-        from .mechanisms.sm import build_sm_result
+        from .mechanisms.sm import build_sm_result, per_warp_programs
+        if sm_mechanism not in ("sm_interleave", "sm_jax"):
+            raise ValueError(f"sm_mechanism must be 'sm_interleave' or "
+                             f"'sm_jax', got {sm_mechanism!r}")
         if inner is None:
             inner_name = self._default
-            if inner_name == "sm_interleave":     # default fallback only:
-                inner_name = "hanoi"              # nesting is an error below
-        else:
-            inner_name = get_mechanism(inner).name
-            if inner_name == "sm_interleave":
+            if "composite" in get_mechanism(inner_name).tags:
+                inner_name = "hanoi"     # default fallback only:
+        else:                            # nesting is an error below
+            inner_mech = get_mechanism(inner)
+            inner_name = inner_mech.name
+            if "composite" in inner_mech.tags:
                 raise ValueError("inner must be a single-warp mechanism, "
-                                 "not sm_interleave itself")
-        from .mechanisms.sm import warp_count
-        if isinstance(programs, (list, tuple)):
-            if n_warps is not None and n_warps != len(programs):
-                raise ValueError(
-                    f"n_warps={n_warps} conflicts with {len(programs)} "
-                    f"per-warp programs")
-            per_warp = list(programs)
-        else:
-            per_warp = [programs] * warp_count(programs, n_warps)
+                                 f"not the composite {inner_name!r}")
+        per_warp = per_warp_programs(programs, n_warps)
         if not per_warp:
             raise ValueError("run_sm needs at least one warp")
         reqs = [as_request(p, cfg, **request_kw) for p in per_warp]
-        # dispatch through the shared planner (the run_batch path) but feed
-        # the sink ourselves: warps of an SM cell archive under sm_run_meta,
-        # not the plain single-warp run_meta run_batch would stamp
-        from repro.service.planner import execute_plan   # lazy: no cycle
-        mech = get_mechanism(inner_name)
-        t0 = time.perf_counter()
-        results = execute_plan(mech, reqs, max_workers=self._max_workers)
-        wall = time.perf_counter() - t0
-        sm = build_sm_result(reqs, results, inner=inner_name,
-                             policy=policy, timing_cfg=timing_cfg,
-                             wall_time_s=wall)
+        if sm_mechanism == "sm_jax":
+            from .mechanisms.sm_jax import run_cells
+            sm = run_cells([reqs], policy=policy, timing_cfg=timing_cfg,
+                           inner_label=inner_name)[0]
+            results: Sequence[SimResult] = sm.warps
+        else:
+            # dispatch through the shared planner (the run_batch path) but
+            # feed the sink ourselves: warps of an SM cell archive under
+            # sm_run_meta, not the single-warp run_meta run_batch stamps
+            from repro.service.planner import execute_plan  # lazy: no cycle
+            mech = get_mechanism(inner_name)
+            t0 = time.perf_counter()
+            results = execute_plan(mech, reqs,
+                                   max_workers=self._max_workers)
+            wall = time.perf_counter() - t0
+            sm = build_sm_result(reqs, results, inner=inner_name,
+                                 policy=policy, timing_cfg=timing_cfg,
+                                 wall_time_s=wall)
         out_sink = sink or self._sink
         if out_sink is not None:
             cell = next_sm_cell_id()

@@ -8,7 +8,13 @@ dispatch path:
 * the Simulator façade calls :func:`execute_plan` on every ``run_batch``;
 * the queue-fed :class:`~repro.service.core.SimulationService` coalesces
   admissions into signature-homogeneous groups and executes each through
-  :func:`run_group`.
+  :func:`run_group`;
+* the SM composites dispatch their warps here too —
+  ``Simulator.run_sm`` and the registered ``sm_interleave`` runner both
+  call :func:`execute_plan` on the cell, so an inner mechanism with a
+  native ``batch_runner`` (``sm_inner="hanoi_jax"``) executes the whole
+  homogeneous cell as ONE cached ``jit(vmap)`` batch instead of a serial
+  Python loop over warps.
 
 Routing rules:
 

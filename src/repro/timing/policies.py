@@ -27,8 +27,43 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import numpy as np
+
 __all__ = ["IssuePolicy", "GreedyThenOldest", "RoundRobin", "OldestFirst",
-           "POLICY_NAMES", "get_policy", "resolve_policy_name"]
+           "POLICY_NAMES", "get_policy", "resolve_policy_name",
+           "priority_keys"]
+
+
+def priority_keys(name: str, n_warps: int, *, last: "int | None" = None,
+                  cursor: int = 0) -> np.ndarray:
+    """The argmin-vector formulation of an issue policy's ``select``.
+
+    Returns an ``int32[n_warps]`` key vector such that, for any non-empty
+    ready set *R* and the policy state ``(last, cursor)``,
+    ``select(R) == argmin over w in R of keys[w]`` — ties are impossible
+    because every vector below is injective over ``[0, n_warps)``:
+
+    * ``oldest_first``:       ``keys[w] = w``;
+    * ``greedy_then_oldest``: ``keys[w] = w + 1`` except ``keys[last] = 0``
+      (``last=None`` — post-stall — leaves the vector monotone, so the
+      minimum falls back to the oldest ready warp);
+    * ``round_robin``:        ``keys[w] = (w - cursor) mod n_warps``.
+
+    This is the *one* formulation array schedulers (``sm_jax``) mirror with
+    ``argmin(where(ready, keys, INF))``; a drift test pins it against the
+    stateful classes below so the two can never diverge.
+    """
+    name = resolve_policy_name(name)
+    n = max(1, int(n_warps))
+    w = np.arange(n, dtype=np.int32)
+    if name == OldestFirst.name:
+        return w
+    if name == GreedyThenOldest.name:
+        keys = w + 1
+        if last is not None and 0 <= last < n:
+            keys[last] = 0
+        return keys
+    return (w - np.int32(cursor)) % n          # round_robin
 
 
 class IssuePolicy:
@@ -50,6 +85,10 @@ class IssuePolicy:
     def stalled(self) -> None:             # pragma: no cover - trivial hook
         """The scheduler sat idle (no ready warp) before this selection."""
         pass
+
+    def priority_keys(self) -> np.ndarray:
+        """This policy's :func:`priority_keys` vector at its current state."""
+        return priority_keys(self.name, self.n_warps)
 
 
 class GreedyThenOldest(IssuePolicy):
@@ -75,6 +114,9 @@ class GreedyThenOldest(IssuePolicy):
         # stickiness so the shim stays bit-identical to it.
         self._last = None
 
+    def priority_keys(self) -> np.ndarray:
+        return priority_keys(self.name, self.n_warps, last=self._last)
+
 
 class RoundRobin(IssuePolicy):
     """Fair rotation: the ready warp closest after the last grant."""
@@ -91,6 +133,9 @@ class RoundRobin(IssuePolicy):
 
     def issued(self, warp: int) -> None:
         self._next = warp + 1
+
+    def priority_keys(self) -> np.ndarray:
+        return priority_keys(self.name, self.n_warps, cursor=self._next)
 
 
 class OldestFirst(IssuePolicy):
