@@ -30,9 +30,15 @@ any mechanism by name:
 9. run the same SM cell on ``sm_jax`` — the whole SM (lane execution +
    issue scheduling) as one ``jit(vmap)`` lane-parallel device program —
    and check it is bit-identical to the Python interleaver, with JIT
-   compilation metered separately from execution wall time.
+   compilation metered separately from execution wall time;
+10. scale out: a 2-process service (``procs=2`` — signature-affine shard
+    routing, numpy groups chunked across shards) warmed from a persistent
+    compile cache (``warm_start=``), then restarted to prove the
+    zero-re-trace contract from its own cache counters.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(the ``main()`` guard is required: section 10 spawns worker processes and
+the spawn start method re-imports this file in each child)
 """
 import tempfile
 
@@ -41,172 +47,215 @@ from repro.core.programs import (fig6_program, make_suite,
                                  spinlock_no_yield_program, spinlock_program)
 from repro.engine import RotatingJsonlSink, Simulator, SimStatus
 
-W = 8
-CFG = MachineConfig(n_threads=W, max_steps=40_000)
-sim = Simulator("hanoi")
 
-# --- 1. spinlock: pre-Volta deadlock vs Hanoi ------------------------------
-prog = spinlock_program()
-print("=== spinlock (Fig 3/7) ===")
-print(disassemble(prog))
-pre = sim.run(prog, CFG, mechanism="simt_stack")
-post = sim.run(prog, CFG, mechanism="hanoi")
-print(f"\npre-Volta SIMT-Stack: status={pre.status.value} "
-      f"(critical sections completed: {int(pre.mem[1])}/{W})")
-print(f"Hanoi:                status={post.status.value} "
-      f"counter={int(post.mem[1])}/{W} (mutual exclusion held)")
-assert pre.status is SimStatus.OUT_OF_FUEL and post.status is SimStatus.OK
+def main():
+    W = 8
+    CFG = MachineConfig(n_threads=W, max_steps=40_000)
+    sim = Simulator("hanoi")
 
-# --- 2. early reconvergence with BREAK (Fig 6) ------------------------------
-r = sim.run(fig6_program(), MachineConfig(n_threads=4, max_steps=512))
-print("\n=== Fig 6: BREAK enables reconvergence BEFORE the IPDom ===")
-print(f"completed: {r.ok}; "
-      f"early-reconverged mask seen in trace: "
-      f"{any(m == 0b1110 for _, m in r.trace)}")
+    # --- 1. spinlock: pre-Volta deadlock vs Hanoi ------------------------------
+    prog = spinlock_program()
+    print("=== spinlock (Fig 3/7) ===")
+    print(disassemble(prog))
+    pre = sim.run(prog, CFG, mechanism="simt_stack")
+    post = sim.run(prog, CFG, mechanism="hanoi")
+    print(f"\npre-Volta SIMT-Stack: status={pre.status.value} "
+          f"(critical sections completed: {int(pre.mem[1])}/{W})")
+    print(f"Hanoi:                status={post.status.value} "
+          f"counter={int(post.mem[1])}/{W} (mutual exclusion held)")
+    assert pre.status is SimStatus.OUT_OF_FUEL and post.status is SimStatus.OK
 
-# --- 3. trace discrepancy vs the hardware heuristic (Fig 9) -----------------
-CFG32 = MachineConfig(n_threads=32, max_steps=60_000)
-bench = next(b for b in make_suite(CFG32) if b.name == "BFSD")
-report = sim.compare(["hanoi", "turing_oracle"], [bench], CFG32,
-                     pairs=[("hanoi", "turing_oracle")], timing=False)
-row = report.pair("hanoi", "turing_oracle")[0]
-print("\n=== Fig 9/10: BFSD — Hanoi enforces reconvergence, hardware skips ===")
-print(f"trace discrepancy: {row.discrepancy_pct:.1f}%")
-print(f"SIMD utilization:  hanoi={row.util_a:.3f} hw={row.util_b:.3f}")
+    # --- 2. early reconvergence with BREAK (Fig 6) ------------------------------
+    r = sim.run(fig6_program(), MachineConfig(n_threads=4, max_steps=512))
+    print("\n=== Fig 6: BREAK enables reconvergence BEFORE the IPDom ===")
+    print(f"completed: {r.ok}; "
+          f"early-reconverged mask seen in trace: "
+          f"{any(m == 0b1110 for _, m in r.trace)}")
 
-# --- 4. post-Volta per-thread PCs + per-SM multi-warp interleaving ----------
-noyield = spinlock_no_yield_program()
-hang = sim.run(noyield, CFG)                       # Hanoi: SS V-G ablation
-its = sim.run(noyield, CFG, mechanism="volta_itps")
-print("\n=== YIELD-less spinlock: stack mechanisms hang, per-thread PCs "
-      "don't ===")
-print(f"Hanoi:      status={hang.status.value} (needs YIELD to make "
-      f"progress)")
-print(f"volta_itps: status={its.status.value} counter={int(its.mem[1])}/{W} "
-      f"(scheduler's forward-progress guarantee)")
-assert not hang.ok and its.ok and int(its.mem[1]) == W
+    # --- 3. trace discrepancy vs the hardware heuristic (Fig 9) -----------------
+    CFG32 = MachineConfig(n_threads=32, max_steps=60_000)
+    bench = next(b for b in make_suite(CFG32) if b.name == "BFSD")
+    report = sim.compare(["hanoi", "turing_oracle"], [bench], CFG32,
+                         pairs=[("hanoi", "turing_oracle")], timing=False)
+    row = report.pair("hanoi", "turing_oracle")[0]
+    print("\n=== Fig 9/10: BFSD — Hanoi enforces reconvergence, hardware skips ===")
+    print(f"trace discrepancy: {row.discrepancy_pct:.1f}%")
+    print(f"SIMD utilization:  hanoi={row.util_a:.3f} hw={row.util_b:.3f}")
 
-bench = next(b for b in make_suite(CFG) if b.name == "RBFS0")
-sm = sim.run_sm(bench, CFG, n_warps=4, inner="hanoi",
-                policy="greedy_then_oldest")
-print(f"\n=== per-SM: 4 warps of RBFS0 under GTO ===")
-print(f"status={sm.status.value} slots={sm.steps} cycles={sm.cycles} "
-      f"thread-IPC={sm.ipc:.2f} util={sm.utilization:.3f}")
-assert sm.ok
+    # --- 4. post-Volta per-thread PCs + per-SM multi-warp interleaving ----------
+    noyield = spinlock_no_yield_program()
+    hang = sim.run(noyield, CFG)                       # Hanoi: SS V-G ablation
+    its = sim.run(noyield, CFG, mechanism="volta_itps")
+    print("\n=== YIELD-less spinlock: stack mechanisms hang, per-thread PCs "
+          "don't ===")
+    print(f"Hanoi:      status={hang.status.value} (needs YIELD to make "
+          f"progress)")
+    print(f"volta_itps: status={its.status.value} counter={int(its.mem[1])}/{W} "
+          f"(scheduler's forward-progress guarantee)")
+    assert not hang.ok and its.ok and int(its.mem[1]) == W
 
-# --- 5. the simulation service: coalesced, sharded, archived ----------------
-from repro.service import SimulationService
+    bench = next(b for b in make_suite(CFG) if b.name == "RBFS0")
+    sm = sim.run_sm(bench, CFG, n_warps=4, inner="hanoi",
+                    policy="greedy_then_oldest")
+    print(f"\n=== per-SM: 4 warps of RBFS0 under GTO ===")
+    print(f"status={sm.status.value} slots={sm.steps} cycles={sm.cycles} "
+          f"thread-IPC={sm.ipc:.2f} util={sm.utilization:.3f}")
+    assert sm.ok
 
-suite8 = make_suite(CFG, datasets=1)
-benches = [b for b in suite8 if b.name in ("HOTS0", "GAUS0", "RBFS0",
-                                           "DIAMOND")]
-with tempfile.TemporaryDirectory() as tmp:
-    archive = RotatingJsonlSink(tmp, max_bytes=1 << 20)
-    with SimulationService(default_mechanism="hanoi_jax", max_batch=8,
-                           max_wait_s=0.01, workers=2,
-                           archive=archive) as svc:
-        # mixed admission: a homogeneous hanoi_jax group + numpy singles
-        tickets = [svc.submit(b, CFG) for b in benches]            # jax
-        tickets += [svc.submit(benches[0], CFG, mechanism=m)       # numpy
-                    for m in ("hanoi", "simt_stack")]
-        cell = svc.submit_sm(benches[2], CFG, n_warps=4, inner="hanoi",
-                             policy="greedy_then_oldest")          # SM shard
-        svc.flush()
-        results = [t.result() for t in tickets]
-        sm_cell = cell.result()
-        stats = svc.stats()
-    archive.flush()
-    archive.close()
-    print("\n=== simulation service: one queue over every mechanism ===")
-    print(f"completed={stats.completed} (sm_jobs={stats.sm_jobs}) "
-          f"batches={stats.batches} native={stats.native_batches} "
-          f"(x{stats.native_warps} warps) mean-fill={stats.mean_fill:.1f}")
-    print(f"p50={stats.latency_p50_s * 1e3:.1f}ms "
-          f"p99={stats.latency_p99_s * 1e3:.1f}ms "
-          f"archived {archive.runs_written} runs -> "
-          f"{len(archive.paths)} file(s)")
-    # the homogeneous hanoi_jax group went through the native vmap runner
-    assert all(r.meta["service"]["native"] for r in results[:4])
-    assert all(r.ok for r in results) and sm_cell.ok
-    # stats and archive both count warps: 6 single-warp + the 4 SM warps
-    assert stats.completed == len(results) + sm_cell.n_warps
-    assert archive.runs_written == stats.completed
+    # --- 5. the simulation service: coalesced, sharded, archived ----------------
+    from repro.service import SimulationService
 
-    # --- 6. offline archive replay: Fig 9 from the durable archive ----------
-    from repro.archive import ArchiveReader, Replayer
+    suite8 = make_suite(CFG, datasets=1)
+    benches = [b for b in suite8 if b.name in ("HOTS0", "GAUS0", "RBFS0",
+                                               "DIAMOND")]
+    with tempfile.TemporaryDirectory() as tmp:
+        archive = RotatingJsonlSink(tmp, max_bytes=1 << 20)
+        with SimulationService(default_mechanism="hanoi_jax", max_batch=8,
+                               max_wait_s=0.01, workers=2,
+                               archive=archive) as svc:
+            # mixed admission: a homogeneous hanoi_jax group + numpy singles
+            tickets = [svc.submit(b, CFG) for b in benches]            # jax
+            tickets += [svc.submit(benches[0], CFG, mechanism=m)       # numpy
+                        for m in ("hanoi", "simt_stack")]
+            cell = svc.submit_sm(benches[2], CFG, n_warps=4, inner="hanoi",
+                                 policy="greedy_then_oldest")          # SM shard
+            svc.flush()
+            results = [t.result() for t in tickets]
+            sm_cell = cell.result()
+            stats = svc.stats()
+        archive.flush()
+        archive.close()
+        print("\n=== simulation service: one queue over every mechanism ===")
+        print(f"completed={stats.completed} (sm_jobs={stats.sm_jobs}) "
+              f"batches={stats.batches} native={stats.native_batches} "
+              f"(x{stats.native_warps} warps) mean-fill={stats.mean_fill:.1f}")
+        print(f"p50={stats.latency_p50_s * 1e3:.1f}ms "
+              f"p99={stats.latency_p99_s * 1e3:.1f}ms "
+              f"archived {archive.runs_written} runs -> "
+              f"{len(archive.paths)} file(s)")
+        # the homogeneous hanoi_jax group went through the native vmap runner
+        assert all(r.meta["service"]["native"] for r in results[:4])
+        assert all(r.ok for r in results) and sm_cell.ok
+        # stats and archive both count warps: 6 single-warp + the 4 SM warps
+        assert stats.completed == len(results) + sm_cell.n_warps
+        assert archive.runs_written == stats.completed
 
-    reader = ArchiveReader(tmp)
-    replay = Replayer().replay(reader)       # self-replay: integrity check
-    print("\n=== archive replay: the served traces, re-run offline ===")
-    print(f"read {reader.report.runs} archived runs "
-          f"(clean={reader.report.clean}); replayed {replay.replayed} "
-          f"incl. {len(replay.by_sm_cell())} SM cell(s)")
-    print(f"self-replay discrepancy: "
-          f"{replay.mean_discrepancy() * 100:.2f}% (bit-equal traces)")
-    # deterministic mechanisms => replay reproduces the archive exactly
-    assert replay.mean_discrepancy() == 0.0
-    # the per-warp SM-cell archives now carry the full replay payload and
-    # group back into their cell in the report
-    assert replay.skipped_unreplayable == 0
-    assert replay.replayed == archive.runs_written
-    (cell_agg,) = replay.by_sm_cell().values()
-    assert cell_agg.count == sm_cell.n_warps and cell_agg.max == 0.0
+        # --- 6. offline archive replay: Fig 9 from the durable archive ----------
+        from repro.archive import ArchiveReader, Replayer
 
-    # --- 7. archive index: O(1) lookup, then replay one cell by id ----------
-    from repro.archive import ArchiveIndex
+        reader = ArchiveReader(tmp)
+        replay = Replayer().replay(reader)       # self-replay: integrity check
+        print("\n=== archive replay: the served traces, re-run offline ===")
+        print(f"read {reader.report.runs} archived runs "
+              f"(clean={reader.report.clean}); replayed {replay.replayed} "
+              f"incl. {len(replay.by_sm_cell())} SM cell(s)")
+        print(f"self-replay discrepancy: "
+              f"{replay.mean_discrepancy() * 100:.2f}% (bit-equal traces)")
+        # deterministic mechanisms => replay reproduces the archive exactly
+        assert replay.mean_discrepancy() == 0.0
+        # the per-warp SM-cell archives now carry the full replay payload and
+        # group back into their cell in the report
+        assert replay.skipped_unreplayable == 0
+        assert replay.replayed == archive.runs_written
+        (cell_agg,) = replay.by_sm_cell().values()
+        assert cell_agg.count == sm_cell.n_warps and cell_agg.max == 0.0
 
-    idx = ArchiveIndex.build(tmp)            # sidecar {prefix}.index.jsonl
-    # the replayed rows already know which runs were SM warps — fetch just
-    # those by id (each get is one seek + read, no archive scan)
-    sm_ids = [f"run-{row.index:06d}" for row in replay.rows
-              if row.sm_cell is not None]
-    warp = reader.get(sm_ids[0])
-    print("\n=== indexed lookup: one SM warp by run id ===")
-    print(f"indexed {len(idx)} runs; {sm_ids[0]} -> warp "
-          f"{warp.meta['sm_warp']}/{warp.meta['sm_warps']} of cell "
-          f"{warp.sm_cell} ({warp.meta['sm_policy']}, {warp.program})")
-    # replay exactly that cell: its warps, fetched by id
-    cell_runs = [r for r in (reader.get(i) for i in sm_ids)
-                 if r.sm_cell == warp.sm_cell]
-    cell_replay = Replayer().replay(cell_runs)
-    assert cell_replay.replayed == sm_cell.n_warps
-    assert cell_replay.mean_discrepancy() == 0.0
+        # --- 7. archive index: O(1) lookup, then replay one cell by id ----------
+        from repro.archive import ArchiveIndex
 
-    # --- 8. cycle-accurate timing: Fig 10 IPC delta + offline re-pricing ----
-    from repro.core.timing import TimingConfig
+        idx = ArchiveIndex.build(tmp)            # sidecar {prefix}.index.jsonl
+        # the replayed rows already know which runs were SM warps — fetch just
+        # those by id (each get is one seek + read, no archive scan)
+        sm_ids = [f"run-{row.index:06d}" for row in replay.rows
+                  if row.sm_cell is not None]
+        warp = reader.get(sm_ids[0])
+        print("\n=== indexed lookup: one SM warp by run id ===")
+        print(f"indexed {len(idx)} runs; {sm_ids[0]} -> warp "
+              f"{warp.meta['sm_warp']}/{warp.meta['sm_warps']} of cell "
+              f"{warp.sm_cell} ({warp.meta['sm_policy']}, {warp.program})")
+        # replay exactly that cell: its warps, fetched by id
+        cell_runs = [r for r in (reader.get(i) for i in sm_ids)
+                     if r.sm_cell == warp.sm_cell]
+        cell_replay = Replayer().replay(cell_runs)
+        assert cell_replay.replayed == sm_cell.n_warps
+        assert cell_replay.mean_discrepancy() == 0.0
 
-    rep10 = sim.compare(["hanoi", "simt_stack"], [benches[0]], CFG,
-                        timing="cycle")      # scoreboard cycle engine
-    r10 = rep10.pair("hanoi", "simt_stack")[0]
-    t_h = rep10.timing_results[(r10.program, "hanoi")]
-    print("\n=== Fig 10 on the cycle engine: IPC delta + stall taxonomy ===")
-    print(f"{r10.program}: ipc_delta={r10.ipc_delta_pct:+.2f}% "
-          f"(hanoi ipc={t_h.ipc:.3f}; stalls {t_h.stall_breakdown})")
-    assert t_h.cycles == (t_h.busy_cycles + t_h.scoreboard_stall_cycles
-                          + t_h.memory_stall_cycles)
-    # archived SM cells carry an sm_timing stamp: re-derive IPC offline
-    # (bit-equal under the config it ran with), then re-price it under
-    # slower memory without re-running any mechanism
-    (td,) = Replayer().rederive_timing(reader)
-    assert td.matches_archive and td.result.cycles == sm_cell.cycles
-    (slow,) = Replayer().rederive_timing(
-        reader, timing_cfg=TimingConfig(memory_latency=300))
-    print(f"SM cell re-derived offline: ipc={td.ipc:.2f} "
-          f"(stamp=match); at memory_latency=300: ipc={slow.ipc:.2f}")
+        # --- 8. cycle-accurate timing: Fig 10 IPC delta + offline re-pricing ----
+        from repro.core.timing import TimingConfig
 
-# --- 9. sm_jax: the whole SM as one jit(vmap) lane-parallel program ---------
-jax_cell = sim.run_sm(benches[2], CFG, n_warps=4, inner="hanoi_jax",
-                      policy="greedy_then_oldest", sm_mechanism="sm_jax")
-py_cell = sim.run_sm(benches[2], CFG, n_warps=4, inner="hanoi",
-                     policy="greedy_then_oldest")
-print("\n=== sm_jax: lane-parallel SM cell, bit-equal to the interleaver ===")
-print(f"{benches[2].name}: {jax_cell.n_warps} warps -> "
-      f"slots={jax_cell.steps} cycles={jax_cell.cycles} "
-      f"stalls={jax_cell.stall_breakdown}")
-print(f"compile {jax_cell.meta.get('compile_time_s', 0.0):.2f}s metered "
-      f"separately from wall {jax_cell.wall_time_s * 1e3:.2f}ms")
-assert jax_cell.sm_trace == py_cell.sm_trace        # bit-identical schedule
-assert jax_cell.cycles == py_cell.cycles
-assert jax_cell.stall_breakdown == py_cell.stall_breakdown
-assert jax_cell.mechanism == "sm_jax"
-print("\nquickstart OK")
+        rep10 = sim.compare(["hanoi", "simt_stack"], [benches[0]], CFG,
+                            timing="cycle")      # scoreboard cycle engine
+        r10 = rep10.pair("hanoi", "simt_stack")[0]
+        t_h = rep10.timing_results[(r10.program, "hanoi")]
+        print("\n=== Fig 10 on the cycle engine: IPC delta + stall taxonomy ===")
+        print(f"{r10.program}: ipc_delta={r10.ipc_delta_pct:+.2f}% "
+              f"(hanoi ipc={t_h.ipc:.3f}; stalls {t_h.stall_breakdown})")
+        assert t_h.cycles == (t_h.busy_cycles + t_h.scoreboard_stall_cycles
+                              + t_h.memory_stall_cycles)
+        # archived SM cells carry an sm_timing stamp: re-derive IPC offline
+        # (bit-equal under the config it ran with), then re-price it under
+        # slower memory without re-running any mechanism
+        (td,) = Replayer().rederive_timing(reader)
+        assert td.matches_archive and td.result.cycles == sm_cell.cycles
+        (slow,) = Replayer().rederive_timing(
+            reader, timing_cfg=TimingConfig(memory_latency=300))
+        print(f"SM cell re-derived offline: ipc={td.ipc:.2f} "
+              f"(stamp=match); at memory_latency=300: ipc={slow.ipc:.2f}")
+
+    # --- 9. sm_jax: the whole SM as one jit(vmap) lane-parallel program ---------
+    jax_cell = sim.run_sm(benches[2], CFG, n_warps=4, inner="hanoi_jax",
+                          policy="greedy_then_oldest", sm_mechanism="sm_jax")
+    py_cell = sim.run_sm(benches[2], CFG, n_warps=4, inner="hanoi",
+                         policy="greedy_then_oldest")
+    print("\n=== sm_jax: lane-parallel SM cell, bit-equal to the interleaver ===")
+    print(f"{benches[2].name}: {jax_cell.n_warps} warps -> "
+          f"slots={jax_cell.steps} cycles={jax_cell.cycles} "
+          f"stalls={jax_cell.stall_breakdown}")
+    print(f"compile {jax_cell.meta.get('compile_time_s', 0.0):.2f}s metered "
+          f"separately from wall {jax_cell.wall_time_s * 1e3:.2f}ms")
+    assert jax_cell.sm_trace == py_cell.sm_trace        # bit-identical schedule
+    assert jax_cell.cycles == py_cell.cycles
+    assert jax_cell.stall_breakdown == py_cell.stall_breakdown
+    assert jax_cell.mechanism == "sm_jax"
+
+    # --- 10. process tier: 2 shard processes + a warmed compile cache -----------
+    # Numpy mechanisms serialize behind the GIL; procs=2 spawns two shard
+    # processes and chunks homogeneous numpy groups across them, while jax
+    # groups stay affine to one shard (executable-cache locality).  The
+    # warm_start directory persists compile work: a restarted service replays
+    # the manifest before admitting traffic, so hot signatures never re-trace.
+    from repro.engine import as_request
+
+    warm_dir = tempfile.mkdtemp(prefix="repro-quickstart-cache-")
+    reqs = [as_request(b, CFG) for b in benches[:4]]
+    with SimulationService(default_mechanism="hanoi", procs=2,
+                           warm_start=warm_dir) as svc:
+        out = svc.run(reqs, timeout=300)                 # chunked across shards
+        jx = svc.run(reqs[:2], mechanism="hanoi_jax", timeout=600)  # affine
+        st = svc.stats()
+    print("\n=== process tier: 2 shards, signature-affine routing ===")
+    shard_of = lambda r: r.meta["service"]["shard"]
+    print(f"numpy group spread over shards {sorted({shard_of(r) for r in out})}; "
+          f"jax group affine to shard {shard_of(jx[0])}")
+    print(f"shards: " + " ".join(f"s{s.shard}(pid {s.pid}): {s.completed} ok"
+                                 for s in st.shards))
+    print(f"compile cache: {st.cache_misses} trace(s) recorded -> {warm_dir}")
+    assert all(a.status == b.status for a, b in
+               zip(out, (sim.run(r) for r in reqs)))
+
+    # restart: the warmed service serves the same jax signature with ZERO
+    # serve-time re-traces (deserialized AOT executable where jaxlib allows)
+    with SimulationService(default_mechanism="hanoi_jax", procs=2,
+                           warm_start=warm_dir) as svc:
+        svc.run(reqs[:2], timeout=600)
+        st2 = svc.stats()
+    print(f"warm restart: {st2.warm_signatures} sig(s) warmed "
+          f"({st2.warm_loaded} deserialized, {st2.warm_retraced} re-traced), "
+          f"serve-time traces={st2.cache_misses}")
+    assert st2.cache_misses == st2.warm_retraced         # zero re-trace contract
+
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":   # required: section 10 spawns processes,
+    main()                   # and spawn children re-import this file

@@ -77,16 +77,23 @@ from .sinks import (JsonlSink, MemorySink, RingBufferSink, RotatingJsonlSink,
 from .types import (SimRequest, SimResult, SimStatus, SmResult,
                     classify_status, worst_status)
 from .simulator import (CompareReport, CompareRow, Simulator, as_request)
+from .compile_cache import (CompileCache, WarmReport, compile_cache_stats,
+                            install_compile_cache, installed_cache,
+                            uninstall_compile_cache)
 from . import adapters as _adapters            # registers the built-ins
 from . import mechanisms as _mechanisms        # registers the plugins
 
 __all__ = [
-    "CompareReport", "CompareRow", "JsonlSink", "MachineConfig", "Mechanism",
+    "CompareReport", "CompareRow", "CompileCache", "JsonlSink",
+    "MachineConfig", "Mechanism",
     "MemorySink", "RingBufferSink", "RotatingJsonlSink", "SimRequest",
     "SimResult", "SimStatus", "SmResult", "Simulator", "TraceSink",
-    "as_request", "available_mechanisms", "classify_status", "feed_result",
-    "get_mechanism", "iter_mechanisms", "register_mechanism",
+    "WarmReport",
+    "as_request", "available_mechanisms", "classify_status",
+    "compile_cache_stats", "feed_result",
+    "get_mechanism", "install_compile_cache", "installed_cache",
+    "iter_mechanisms", "register_mechanism",
     "replay_payload", "run_meta", "sm_run_meta", "timing_meta",
-    "unregister_mechanism",
+    "uninstall_compile_cache", "unregister_mechanism",
     "worst_status",
 ]

@@ -23,8 +23,9 @@ Each adapter funnels through :func:`~repro.engine.types.classify_status`, so
 """
 from __future__ import annotations
 
-import functools
+import threading
 import time
+from collections import OrderedDict
 from typing import Sequence
 
 import numpy as np
@@ -36,7 +37,9 @@ from repro.core.dualpath import run_dual_path
 from .registry import register_mechanism
 from .types import SimRequest, SimResult, classify_status
 
-__all__ = ["PAD_QUANTUM", "padded_len", "result_from_runresult"]
+__all__ = ["PAD_QUANTUM", "padded_len", "result_from_runresult",
+           "batch_cache_stats", "reset_batch_caches",
+           "set_batch_cache_capacity"]
 
 
 def result_from_runresult(mechanism: str, r: RunResult, req: SimRequest,
@@ -154,14 +157,64 @@ def _jax_result(req: SimRequest, state, wall_time_s: float,
         error=error, wall_time_s=wall_time_s, meta=meta or {})
 
 
-@functools.lru_cache(maxsize=None)
+class _LruDict(OrderedDict):
+    """A bounded mapping with LRU eviction and an eviction counter.
+
+    The old ``functools.lru_cache(maxsize=None)`` / bare-dict pair grew
+    without bound in a long-lived service process — one entry per distinct
+    (cfg, majority_first, batch, pad-class) shape a tenant ever submitted.
+    ``__setitem__`` evicts the least-recently-used entry past ``maxsize``;
+    ``get`` refreshes recency.  Callers serialize access through
+    ``_BATCH_CACHE_LOCK`` — the class itself is not thread-safe.
+    """
+
+    def __init__(self, maxsize: int):
+        super().__init__()
+        self.maxsize = int(maxsize)
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        try:
+            self.move_to_end(key)
+        except KeyError:
+            return default
+        return super().__getitem__(key)
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            self.popitem(last=False)
+            self.evictions += 1
+
+
+#: Default capacities: executables dominate host memory, jit wrappers are
+#: cheap but each fronts its own XLA trace cache, so both are bounded.
+_EXEC_CACHE_CAPACITY = 256
+_JIT_CACHE_CAPACITY = 64
+
+_BATCH_CACHE_LOCK = threading.Lock()
+_JITTED_RUNNERS = _LruDict(_JIT_CACHE_CAPACITY)
+
+#: hits / misses are *executable*-cache counters: a miss means a fresh XLA
+#: trace+compile happened in this process (the "re-trace" the warm-start
+#: gate asserts to zero); a disk_hit means the persistent compile cache
+#: supplied the executable without tracing.
+_BATCH_STATS = {"hits": 0, "misses": 0, "disk_hits": 0, "trace_time_s": 0.0}
+
+
 def _jitted_batch_runner(cfg, majority_first: bool):
-    """One jitted vmap-over-(warps, programs) executable per (cfg,
+    """One jitted vmap-over-(warps, programs) callable per (cfg,
     majority_first).  The jit boundary is essential for service throughput:
     a bare ``jax.vmap(one)`` re-traces the whole state machine on *every*
     batch call (slower than the per-request path, whose inner ``_run`` jit
     caches), whereas this callable re-traces only per new (batch size,
     padded length) shape and then replays the cached executable."""
+    key = (cfg, bool(majority_first))
+    with _BATCH_CACHE_LOCK:
+        fn = _JITTED_RUNNERS.get(key)
+    if fn is not None:
+        return fn
     import jax
     from repro.core.hanoi import _run, init_state
 
@@ -170,7 +223,10 @@ def _jitted_batch_runner(cfg, majority_first: bool):
                         lane_ids=lane)
         return _run(prog, st, skip, cfg, majority_first)
 
-    return jax.jit(jax.vmap(one))
+    fn = jax.jit(jax.vmap(one))
+    with _BATCH_CACHE_LOCK:
+        _JITTED_RUNNERS[key] = fn
+    return fn
 
 
 def _batch_arrays(reqs: Sequence[SimRequest], cfg, pad_len: int
@@ -205,21 +261,97 @@ def _batch_arrays(reqs: Sequence[SimRequest], cfg, pad_len: int
 # Compilation happens exactly once per key, *outside* any request's timed
 # window — first-call compile latency used to be amortized into the batch's
 # per-request wall times, poisoning ServiceStats p50/p99 and bench numbers.
-_COMPILED_BATCH: dict = {}
+_COMPILED_BATCH = _LruDict(_EXEC_CACHE_CAPACITY)
+
+
+def batch_cache_stats() -> dict:
+    """Snapshot of the hanoi_jax batch-compilation caches.
+
+    ``misses`` counts fresh XLA trace+compiles in this process (the
+    "re-trace" events the warm-start gate asserts to zero); ``disk_hits``
+    counts executables supplied by an installed persistent
+    :mod:`~repro.engine.compile_cache` without tracing; ``trace_time_s``
+    is the cumulative wall time spent tracing+compiling.
+    """
+    with _BATCH_CACHE_LOCK:
+        return {**_BATCH_STATS,
+                "entries": len(_COMPILED_BATCH),
+                "capacity": _COMPILED_BATCH.maxsize,
+                "evictions": (_COMPILED_BATCH.evictions
+                              + _JITTED_RUNNERS.evictions)}
+
+
+def reset_batch_caches() -> None:
+    """Drop every in-memory compiled executable / jit wrapper and zero the
+    counters — simulates a process restart for warm-start tests without
+    actually respawning the interpreter."""
+    with _BATCH_CACHE_LOCK:
+        _COMPILED_BATCH.clear()
+        _COMPILED_BATCH.evictions = 0
+        _JITTED_RUNNERS.clear()
+        _JITTED_RUNNERS.evictions = 0
+        for k in _BATCH_STATS:
+            _BATCH_STATS[k] = 0.0 if k == "trace_time_s" else 0
+
+
+def set_batch_cache_capacity(executables: int | None = None,
+                             runners: int | None = None) -> None:
+    """Re-bound the in-memory caches (existing overflow evicts eagerly)."""
+    with _BATCH_CACHE_LOCK:
+        if executables is not None:
+            _COMPILED_BATCH.maxsize = int(executables)
+            while len(_COMPILED_BATCH) > _COMPILED_BATCH.maxsize:
+                _COMPILED_BATCH.popitem(last=False)
+                _COMPILED_BATCH.evictions += 1
+        if runners is not None:
+            _JITTED_RUNNERS.maxsize = int(runners)
+            while len(_JITTED_RUNNERS) > _JITTED_RUNNERS.maxsize:
+                _JITTED_RUNNERS.popitem(last=False)
+                _JITTED_RUNNERS.evictions += 1
 
 
 def _compiled_batch_exec(cfg, majority_first: bool, batch: int, pad_len: int):
     """``(compiled executable, fresh compile seconds | None)`` for one
     (cfg, majority_first, batch-size, padding-class) shape signature.
 
-    Uses the AOT path (``jit(...).lower(...).compile()``) so trace+compile
-    time is measured separately from execution; a cache hit returns
-    ``None`` for the compile time.
+    Lookup order: in-memory LRU -> installed persistent compile cache
+    (deserialized AOT executable, no trace) -> fresh AOT trace+compile
+    (``jit(...).lower(...).compile()``), which is then offered back to the
+    persistent cache.  An in-memory hit whose signature is missing from
+    the installed cache's manifest is *adopted* (stored on the spot):
+    executables compiled before the cache was installed are still hot
+    traffic, and a warm start must replay them too.  Only the
+    fresh-compile path returns a non-``None`` compile time —
+    trace/compile latency is measured separately from execution so it
+    never inflates request wall times.
     """
+    from .compile_cache import installed_cache
+
     key = (cfg, bool(majority_first), int(batch), int(pad_len))
-    hit = _COMPILED_BATCH.get(key)
+    with _BATCH_CACHE_LOCK:
+        hit = _COMPILED_BATCH.get(key)
+        if hit is not None:
+            _BATCH_STATS["hits"] += 1
     if hit is not None:
+        cache = installed_cache()
+        if cache is not None and not cache.has(
+                "hanoi_jax", cfg, majority_first, batch, pad_len):
+            # compiled before the cache was installed: adopt it, so the
+            # signature is hot in the manifest and warm starts replay it
+            cache.store_executable("hanoi_jax", cfg, majority_first,
+                                   batch, pad_len, hit)
         return hit, None
+
+    cache = installed_cache()
+    if cache is not None:
+        compiled = cache.load_executable("hanoi_jax", cfg, majority_first,
+                                         batch, pad_len)
+        if compiled is not None:
+            with _BATCH_CACHE_LOCK:
+                _BATCH_STATS["disk_hits"] += 1
+                _COMPILED_BATCH[key] = compiled
+            return compiled, None
+
     import jax
     import jax.numpy as jnp
 
@@ -233,7 +365,13 @@ def _compiled_batch_exec(cfg, majority_first: bool, batch: int, pad_len: int):
         sds((batch, cfg.mem_size), jnp.int32),
         sds((batch, W), jnp.int32)).compile()
     compile_s = time.perf_counter() - t0
-    _COMPILED_BATCH[key] = compiled
+    with _BATCH_CACHE_LOCK:
+        _BATCH_STATS["misses"] += 1
+        _BATCH_STATS["trace_time_s"] += compile_s
+        _COMPILED_BATCH[key] = compiled
+    if cache is not None:
+        cache.store_executable("hanoi_jax", cfg, majority_first, batch,
+                               pad_len, compiled, compile_s)
     return compiled, compile_s
 
 

@@ -48,6 +48,28 @@ def _freeze_meta(obj: Any, value: Mapping[str, Any]) -> None:
                        _pytypes.MappingProxyType(dict(value)))
 
 
+class _PicklableMeta:
+    """Pickle support for the frozen request/result dataclasses.
+
+    The ``meta`` field is normalized to a ``MappingProxyType``, which
+    pickle refuses — a problem for the multi-process service tier, whose
+    job/result envelopes carry these objects across process boundaries.
+    ``__getstate__`` downgrades the proxy to a plain dict;
+    ``__setstate__`` restores the fields and re-freezes ``meta``, so the
+    immutability contract survives the round trip.
+    """
+
+    def __getstate__(self) -> dict[str, Any]:
+        state = dict(self.__dict__)
+        state["meta"] = dict(state["meta"])
+        return state
+
+    def __setstate__(self, state: dict[str, Any]) -> None:
+        for k, v in state.items():
+            object.__setattr__(self, k, v)
+        _freeze_meta(self, state["meta"])
+
+
 class SimStatus(enum.Enum):
     """Normalized termination status (see module docstring)."""
 
@@ -58,7 +80,7 @@ class SimStatus(enum.Enum):
 
 
 @dataclass(frozen=True, eq=False)
-class SimRequest:
+class SimRequest(_PicklableMeta):
     """One warp execution: program + machine + initial state + run options.
 
     ``fuel`` overrides ``cfg.max_steps`` when given (so a shared config can
@@ -99,7 +121,7 @@ class SimRequest:
 
 
 @dataclass(frozen=True, eq=False)
-class SimResult:
+class SimResult(_PicklableMeta):
     """Normalized outcome of running one warp under one mechanism.
 
     ``eq=False`` for the same reason as :class:`SimRequest`: identity
@@ -150,7 +172,7 @@ def worst_status(statuses) -> SimStatus:
 
 
 @dataclass(frozen=True, eq=False)
-class SmResult:
+class SmResult(_PicklableMeta):
     """Outcome of running N warps on one SM through a single-warp mechanism.
 
     The SM model time-multiplexes the warps' control-flow traces through one

@@ -90,6 +90,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
 def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
                       sink=None, max_workers: int | None = None,
                       max_batch: int = 64, max_wait_s: float = 0.005,
+                      procs: int = 0, warm_start: str | None = None,
                       service=None) -> dict:
     """Serve a batch of control-flow simulation requests.
 
@@ -104,6 +105,13 @@ def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
     combining ``service`` with ``sink`` is rejected rather than silently
     ignoring the sink); otherwise a private service is spun up and drained
     for this batch.
+
+    ``procs > 0`` turns on the process-backed execution tier: N spawned
+    shard processes with signature-affine routing (numpy groups chunk
+    across shards, escaping the GIL).  ``warm_start`` names a persistent
+    compile-cache directory — hot signatures recorded there are re-primed
+    before the service admits traffic, so a restarted service serves its
+    first hot-path batch with zero re-traces.
     """
     from repro.service import SimulationService
 
@@ -120,7 +128,9 @@ def serve_simulations(requests, *, mechanism: str = "hanoi_jax",
         with SimulationService(default_mechanism=mechanism, archive=sink,
                                workers=max_workers or 2,
                                max_batch=max_batch,
-                               max_wait_s=max_wait_s) as svc:
+                               max_wait_s=max_wait_s,
+                               procs=procs, warm_start=warm_start or None
+                               ) as svc:
             results = svc.run(requests)
             stats = svc.stats()
     dt = time.time() - t0
@@ -148,7 +158,8 @@ def _sim_main(args) -> None:
     service = SimulationService(
         default_mechanism=args.mechanism, archive=archive,
         workers=args.workers, max_batch=args.max_batch,
-        max_wait_s=args.max_wait_ms / 1000.0)
+        max_wait_s=args.max_wait_ms / 1000.0,
+        procs=args.procs, warm_start=args.warm_start or None)
     try:
         with service as svc:
             if args.sm_warps:
@@ -194,6 +205,14 @@ def _sim_main(args) -> None:
           f"p99={stats.latency_p99_s * 1e3:.1f}ms "
           + (f"archived={archive.runs_written} runs in "
              f"{len(archive.paths)} file(s)" if archive else ""))
+    if stats.procs:
+        shard_lbl = " ".join(
+            f"s{s.shard}:{s.completed}ok/{s.failed}bad" for s in stats.shards)
+        print(f"[serve:sim] procs={stats.procs} [{shard_lbl}] "
+              f"cache hits={stats.cache_hits} misses={stats.cache_misses} "
+              f"disk={stats.cache_disk_hits} "
+              f"warm={stats.warm_loaded}+{stats.warm_retraced}re "
+              f"trace={stats.cache_trace_time_s:.2f}s")
 
 
 def _replay_main(args) -> None:
@@ -247,6 +266,16 @@ def main():
     ap.add_argument("--mix", default="",
                     help="[sim] comma-separated mechanisms to round-robin "
                          "requests over (exercises mixed-batch coalescing)")
+    ap.add_argument("--procs", type=int, default=0,
+                    help="sim mode: size of the process-backed execution "
+                         "tier; 0 (default) keeps the in-process thread "
+                         "pool, N>0 spawns N shard processes with "
+                         "signature-affine routing")
+    ap.add_argument("--warm-start", default="",
+                    help="sim mode: persistent compile-cache directory; "
+                         "hot signatures recorded there are re-primed "
+                         "(deserialized or re-traced) before the service "
+                         "admits traffic")
     ap.add_argument("--workers", type=int, default=2,
                     help="[sim] service worker threads")
     ap.add_argument("--max-batch", type=int, default=64,

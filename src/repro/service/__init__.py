@@ -39,12 +39,16 @@ Quick start
 clients of this package.
 """
 from .coalescer import Admission, BatchCoalescer, FlushedGroup
-from .core import ServiceStats, SimTicket, SimulationService
+from .core import (ServiceStats, ServiceStopped, ShardStats, SimTicket,
+                   SimulationService)
 from .planner import DispatchGroup, execute_plan, plan_dispatch, run_group
-from .signature import ExecSignature, meta_key, signature_of
+from .procpool import ArchiveSpec, ProcPool
+from .signature import ExecSignature, meta_key, shard_of, signature_of
 
 __all__ = [
-    "Admission", "BatchCoalescer", "DispatchGroup", "ExecSignature",
-    "FlushedGroup", "ServiceStats", "SimTicket", "SimulationService",
-    "execute_plan", "meta_key", "plan_dispatch", "run_group", "signature_of",
+    "Admission", "ArchiveSpec", "BatchCoalescer", "DispatchGroup",
+    "ExecSignature", "FlushedGroup", "ProcPool", "ServiceStats",
+    "ServiceStopped", "ShardStats", "SimTicket", "SimulationService",
+    "execute_plan", "meta_key", "plan_dispatch", "run_group", "shard_of",
+    "signature_of",
 ]

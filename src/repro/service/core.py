@@ -1,6 +1,6 @@
 """The queue-fed simulation service: admission, coalescing, sharded dispatch.
 
-Architecture (one process, thread-based; see ``docs/service.md``)::
+Architecture (thread tier; see ``docs/service.md``)::
 
     submit()/submit_sm()                 service threads
         |                                   |
@@ -13,6 +13,14 @@ Architecture (one process, thread-based; see ``docs/service.md``)::
                                                   |
                                                   v
                                       tickets resolved + archive sink
+
+With ``procs=N`` the dispatch queue + worker pool is replaced by the
+**process tier** (:mod:`repro.service.procpool`): flushed groups and SM
+cells route to N spawned shard processes — jax groups by signature
+affinity, numpy groups chunked across shards — and one collector thread
+resolves tickets from the reply queue.  ``warm_start=`` points both tiers
+at a persistent :mod:`repro.engine.compile_cache` directory that is
+replayed before traffic is admitted.
 
 * **Admission**: ``submit`` coerces the request, derives its
   :class:`~repro.service.signature.ExecSignature`, hands it to the
@@ -50,17 +58,22 @@ from typing import Any, Mapping, Sequence
 from repro.core.isa import MachineConfig
 from repro.core.timing import TimingConfig
 from repro.core.trace import nearest_rank
+from repro.engine.compile_cache import (compile_cache_stats,
+                                        install_compile_cache, shard_of_token)
 from repro.engine.registry import get_mechanism
 from repro.engine.simulator import ProgramLike, Simulator, as_request
-from repro.engine.sinks import (TraceSink, feed_result, next_sm_cell_id,
-                                run_meta, sm_run_meta, timing_meta)
+from repro.engine.sinks import (RotatingJsonlSink, TraceSink, feed_result,
+                                next_sm_cell_id, run_meta, sm_run_meta,
+                                timing_meta)
 from repro.engine.types import SimRequest, SimResult, SmResult
 
 from .coalescer import BatchCoalescer, FlushedGroup
 from .planner import group_is_native, run_group
-from .signature import ExecSignature, signature_of
+from .procpool import ArchiveSpec, ProcPool, ServiceStopped
+from .signature import ExecSignature, shard_of, signature_of
 
-__all__ = ["ServiceStats", "SimTicket", "SimulationService"]
+__all__ = ["ServiceStats", "ShardStats", "SimTicket", "SimulationService",
+           "ServiceStopped"]
 
 _SENTINEL = object()
 
@@ -85,6 +98,31 @@ class SimTicket:
 
     def exception(self, timeout: float | None = None):
         return self._future.exception(timeout)
+
+
+@dataclass(frozen=True)
+class ShardStats:
+    """Per-process view merged into :class:`ServiceStats` (process tier).
+
+    Latency percentiles here are computed over *this shard's* reservoir;
+    the service-level percentiles are nearest-rank over the merged union
+    of every shard's reservoir — never an average of averages.
+    """
+
+    shard: int
+    pid: int | None
+    alive: bool
+    jobs: int                     # jobs routed to this shard
+    completed: int                # warps resolved from this shard
+    failed: int
+    latency_p50_s: float
+    latency_p99_s: float
+    cache_hits: int = 0
+    cache_misses: int = 0         # fresh XLA re-traces in the shard
+    cache_disk_hits: int = 0
+    cache_entries: int = 0
+    cache_evictions: int = 0
+    cache_trace_time_s: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -128,6 +166,23 @@ class ServiceStats:
     sm_issue_stall_cycles: int = 0
     sm_scoreboard_stall_cycles: int = 0
     sm_memory_stall_cycles: int = 0
+    # process tier (0 shard processes = classic thread tier)
+    procs: int = 0
+    shards: tuple[ShardStats, ...] = ()
+    # compile-cache counters, summed across this process and every shard:
+    # cache_misses counts fresh XLA re-traces (the warm-start gate drives
+    # this to zero for hot signatures), cache_disk_hits deserialized AOT
+    # executables, cache_trace_time_s cumulative trace+compile wall time
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_disk_hits: int = 0
+    cache_entries: int = 0
+    cache_evictions: int = 0
+    cache_trace_time_s: float = 0.0
+    # warm-start replay outcome, summed across shards
+    warm_signatures: int = 0
+    warm_loaded: int = 0
+    warm_retraced: int = 0
 
     @property
     def mean_fill(self) -> float:
@@ -159,6 +214,24 @@ class _SmJob:
     warps: int = 1      # cell width, counted into the warp-level stats
 
 
+@dataclass
+class _PendingGroup:
+    """Parent-side context for one group job in flight on a shard."""
+
+    entries: list                 # coalescer entries (ticket + request)
+    mechanism: str
+    native: bool
+    shard: int
+
+
+@dataclass
+class _PendingSm:
+    """Parent-side context for one SM cell in flight on a shard."""
+
+    job: _SmJob
+    shard: int
+
+
 class SimulationService:
     """Queue-fed, coalescing, sharded control-flow simulation service.
 
@@ -180,21 +253,51 @@ class SimulationService:
         Worker threads executing flushed groups and SM cells.  Native JAX
         batches release the GIL inside XLA; numpy groups are pure-Python
         loops, so more workers mostly helps mixed/JAX traffic.
+    procs:
+        Shard *processes* (the process tier; ``0`` = classic thread tier).
+        Flushed groups and SM cells route to spawned shard processes:
+        jax-backed groups by signature affinity (each shard keeps its own
+        hot jit/executable cache), numpy groups split into per-shard
+        chunks (no compiled state to keep local — spreading them is what
+        breaks the GIL's single-core ceiling).  See ``docs/service.md``.
+    warm_start:
+        Directory of a persistent :class:`~repro.engine.compile_cache.
+        CompileCache`.  Fresh compiles are recorded there; at start-up the
+        hot-signature manifest is replayed (each shard warms its affine
+        slice) *before* traffic is admitted, so restarts do not re-trace
+        on the serving path.
     archive:
         Optional :class:`~repro.engine.sinks.TraceSink` that receives every
-        completed warp (whole runs, serialized under a service lock).
+        completed warp (whole runs, serialized under a service lock).  In
+        the process tier a :class:`~repro.engine.sinks.RotatingJsonlSink`
+        is re-homed per shard: shard K writes its own rotated
+        ``{prefix}-shard{K}`` family into the same directory (the parent
+        sink itself stays unwritten); any other sink type is fed
+        parent-side from the returned results.
     annotate:
         Attach ``meta["service"]`` (batch size, native routing, flush
-        cause, signature key) to every result — instrumentation for tests
-        and callers; architectural fields are never touched.
+        cause, signature key — plus the shard id in the process tier) to
+        every result — instrumentation for tests and callers;
+        architectural fields are never touched.
+    shard_init:
+        Optional module-level callable, pickled by reference and invoked
+        as ``shard_init(shard)`` inside every spawned shard before it
+        serves — the hook for registering plugin mechanisms in shard
+        processes (a parent-process ``register_mechanism`` call does not
+        cross the spawn boundary).
     """
 
     def __init__(self, *, default_mechanism: str = "hanoi_jax",
                  max_batch: int = 64, max_wait_s: float = 0.005,
-                 workers: int = 2, archive: TraceSink | None = None,
-                 annotate: bool = True) -> None:
+                 workers: int = 2, procs: int = 0,
+                 warm_start: str | None = None,
+                 archive: TraceSink | None = None,
+                 annotate: bool = True,
+                 shard_init=None) -> None:
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if procs < 0:
+            raise ValueError(f"procs must be >= 0, got {procs}")
         self._default = get_mechanism(default_mechanism).name
         self._coalescer: BatchCoalescer[_WarpEntry] = BatchCoalescer(
             max_batch=max_batch, max_wait_s=max_wait_s)
@@ -225,6 +328,19 @@ class SimulationService:
         self._fill: Counter = Counter()
         self._latencies: deque = deque(maxlen=4096)
         self._started_at = time.monotonic()
+        # process tier
+        self._n_procs = int(procs)
+        self._warm_start = warm_start
+        self._shard_init = shard_init
+        self._pool: ProcPool | None = None
+        # per-shard latency reservoirs; stats() merges their union with
+        # self._latencies and takes nearest-rank percentiles over the whole
+        # merged sample — averaging per-shard percentiles would be wrong
+        self._shard_latencies: dict[int, deque] = {}
+        self._shard_counters: dict[int, Counter] = {}
+        self._warm_reports: list[dict] = []       # thread-tier warm outcome
+        self._last_shards: tuple[ShardStats, ...] = ()
+        self._last_cache: dict[str, float] = {}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -235,25 +351,51 @@ class SimulationService:
             self._started = True
             self._stopping = False
             self._started_at = time.monotonic()
+        if self._n_procs > 0:
+            archive_spec = None
+            if isinstance(self._archive, RotatingJsonlSink):
+                # re-home the rotated archive per shard: shard K writes its
+                # own {prefix}-shardK family into the same directory; the
+                # parent's sink object stays unwritten
+                archive_spec = ArchiveSpec(
+                    directory=self._archive.directory,
+                    prefix=self._archive.prefix,
+                    max_bytes=self._archive.max_bytes)
+            self._pool = ProcPool(
+                self._n_procs, default_mechanism=self._default,
+                annotate=self._annotate, archive=archive_spec,
+                warm_start=self._warm_start, shard_init=self._shard_init,
+                on_reply=self._on_pool_reply)
+            if self._warm_start:
+                # warm-start contract: every shard replays its affine slice
+                # of the hot-signature manifest *before* traffic is admitted
+                self._pool.wait_ready(timeout=300.0)
+        elif self._warm_start:
+            cache = install_compile_cache(self._warm_start)
+            self._warm_reports = [cache.warm(shard=0, n_shards=1).as_dict()]
         flusher = threading.Thread(target=self._flusher_loop, daemon=True,
                                    name="sim-service-flusher")
         flusher.start()
         self._threads.append(flusher)
-        for i in range(self._n_workers):
-            w = threading.Thread(target=self._worker_loop, daemon=True,
-                                 name=f"sim-service-worker-{i}")
-            w.start()
-            self._threads.append(w)
+        if self._pool is None:
+            for i in range(self._n_workers):
+                w = threading.Thread(target=self._worker_loop, daemon=True,
+                                     name=f"sim-service-worker-{i}")
+                w.start()
+                self._threads.append(w)
         return self
 
     def stop(self, *, timeout: float = 30.0) -> list[str]:
         """Flush all pending work, drain it, and join the threads.
 
         ``timeout`` is ONE shared deadline across every join — not a
-        per-thread budget (which would make the worst-case shutdown
-        ``(workers + 1) x timeout``).  Returns the names of threads still
-        alive when the deadline expired (empty list = clean shutdown; the
-        stragglers are daemons, so the process can still exit).
+        per-thread/per-shard budget (which would make the worst-case
+        shutdown ``(workers + 1) x timeout``).  Returns the names of
+        threads — and, in the process tier, shard processes — still alive
+        when the deadline expired (empty list = clean shutdown).  A shard
+        that misses the deadline is **terminated**, and every ticket still
+        in flight on the pool resolves with :class:`ServiceStopped`
+        instead of hanging forever.
         """
         with self._admission_lock:
             with self._lock:
@@ -261,14 +403,21 @@ class SimulationService:
                     return []
                 self._stopping = True
         self.flush()
-        self._dispatch.join()                     # drain in-flight jobs
-        for _ in range(self._n_workers):
-            self._dispatch.put(_SENTINEL)
-        self._flusher_wake.set()
         deadline = time.monotonic() + timeout
+        stragglers: list[str] = []
+        if self._pool is not None:
+            self._flusher_wake.set()
+            stragglers += self._pool.stop(deadline=deadline)
+            self._snapshot_pool()
+            self._pool = None
+        else:
+            self._dispatch.join()                 # drain in-flight jobs
+            for _ in range(self._n_workers):
+                self._dispatch.put(_SENTINEL)
+            self._flusher_wake.set()
         for t in self._threads:
             t.join(timeout=max(0.0, deadline - time.monotonic()))
-        stragglers = [t.name for t in self._threads if t.is_alive()]
+        stragglers += [t.name for t in self._threads if t.is_alive()]
         self._threads.clear()
         with self._lock:
             self._started = False
@@ -340,7 +489,18 @@ class SimulationService:
             with self._lock:
                 self._stats["submitted"] += job.warps
                 self._stats["inflight"] += job.warps
-            self._dispatch.put(job)
+            if self._pool is not None:
+                # cell-shape affinity: cells sharing (inner, policy, cfg,
+                # width) land on one shard and reuse its compiled SM state
+                token = (f"sm|{job.kwargs.get('inner') or self._default}"
+                         f"|{job.kwargs.get('policy')}|{job.cfg!r}"
+                         f"|w{job.warps}")
+                shard = self._pool.shard_for_token(token)
+                self._pool.submit_sm(
+                    shard, programs=job.programs, cfg=job.cfg,
+                    kwargs=job.kwargs, ctx=_PendingSm(job=job, shard=shard))
+            else:
+                self._dispatch.put(job)
         return ticket
 
     # -- synchronous conveniences -------------------------------------------
@@ -379,13 +539,74 @@ class SimulationService:
 
     # -- metrics ------------------------------------------------------------
 
+    def _shard_stats_snapshot(self) -> tuple[ShardStats, ...]:
+        """Live per-shard views (process tier); saved snapshot after stop."""
+        pool = self._pool
+        if pool is None:
+            return self._last_shards
+        out = []
+        for info in pool.shard_info():
+            k = info["shard"]
+            with self._lock:
+                lat = sorted(self._shard_latencies.get(k, ()))
+                counters = self._shard_counters.get(k, Counter())
+            cache = info["cache"]
+            out.append(ShardStats(
+                shard=k, pid=info["pid"], alive=info["alive"],
+                jobs=info["jobs"],
+                completed=int(counters.get("completed", 0)),
+                failed=int(counters.get("failed", 0)),
+                latency_p50_s=nearest_rank(lat, 0.50),
+                latency_p99_s=nearest_rank(lat, 0.99),
+                cache_hits=int(cache.get("hits", 0)),
+                cache_misses=int(cache.get("misses", 0)),
+                cache_disk_hits=int(cache.get("disk_hits", 0)),
+                cache_entries=int(cache.get("entries", 0)),
+                cache_evictions=int(cache.get("evictions", 0)),
+                cache_trace_time_s=float(cache.get("trace_time_s", 0.0))))
+        return tuple(out)
+
+    def _snapshot_pool(self) -> None:
+        """Preserve shard + cache views so stats() stays truthful post-stop."""
+        self._last_shards = self._shard_stats_snapshot()
+        if self._pool is not None:
+            self._last_cache = self._pool.cache_totals()
+            self._warm_reports = self._pool.warm_reports()
+
     def stats(self) -> ServiceStats:
         now = time.monotonic()
         with self._lock:
             s = dict(self._stats)
-            lat = sorted(self._latencies)
+            # merged latency sample: the parent reservoir plus every
+            # shard's reservoir — percentiles are nearest-rank over the
+            # union, never an average of per-shard percentiles
+            merged = list(self._latencies)
+            for d in self._shard_latencies.values():
+                merged.extend(d)
+            lat = sorted(merged)
             fill = tuple(sorted(self._fill.items()))
             uptime = max(1e-9, now - self._started_at)
+
+        shards = self._shard_stats_snapshot()
+        # compile-cache counters of the *execution tier*: the shard
+        # processes in the process tier (the parent executes nothing
+        # there — mixing in its unrelated cache history would corrupt the
+        # zero-re-trace gate), this process's own caches otherwise
+        keys = ("hits", "misses", "disk_hits", "entries", "evictions",
+                "trace_time_s")
+        if self._pool is not None:
+            pooled = self._pool.cache_totals()
+        elif self._last_shards:
+            pooled = self._last_cache
+        else:
+            pooled = compile_cache_stats()
+        cache = {k: pooled.get(k, 0) for k in keys}
+        warm = {"signatures": 0, "loaded": 0, "retraced": 0}
+        warm_reports = (self._pool.warm_reports() if self._pool is not None
+                        else self._warm_reports)
+        for rep in warm_reports:
+            for k in warm:
+                warm[k] += int(rep.get(k, 0))
 
         return ServiceStats(
             uptime_s=uptime,
@@ -404,7 +625,18 @@ class SimulationService:
             sm_cycles=s["sm_cycles"], sm_busy_cycles=s["sm_busy_cycles"],
             sm_issue_stall_cycles=s["sm_issue_stall_cycles"],
             sm_scoreboard_stall_cycles=s["sm_scoreboard_stall_cycles"],
-            sm_memory_stall_cycles=s["sm_memory_stall_cycles"])
+            sm_memory_stall_cycles=s["sm_memory_stall_cycles"],
+            procs=self._n_procs if (self._pool is not None
+                                    or self._last_shards) else 0,
+            shards=shards,
+            cache_hits=int(cache["hits"]),
+            cache_misses=int(cache["misses"]),
+            cache_disk_hits=int(cache["disk_hits"]),
+            cache_entries=int(cache["entries"]),
+            cache_evictions=int(cache["evictions"]),
+            cache_trace_time_s=float(cache["trace_time_s"]),
+            warm_signatures=warm["signatures"], warm_loaded=warm["loaded"],
+            warm_retraced=warm["retraced"])
 
     # -- internals: flusher -------------------------------------------------
 
@@ -412,7 +644,125 @@ class SimulationService:
         with self._lock:
             self._stats[f"flush_{group.cause}"] += 1
             self._stats["inflight"] += group.size
-        self._dispatch.put(group)
+        if self._pool is not None:
+            self._route_group_to_pool(group)
+        else:
+            self._dispatch.put(group)
+
+    def _route_group_to_pool(self, group: FlushedGroup[_WarpEntry]) -> None:
+        """Process-tier routing of one flushed group.
+
+        Jax-backed groups go whole to their signature-affine shard — the
+        shard that owns (and stays hot on) that signature's jit/executable
+        cache state.  Numpy groups have no compiled state to keep local
+        and would serialize on one core if pinned, so they split into
+        per-shard chunks (round-robin base so successive groups cover
+        different shards even when the pool is wider than the group).
+        """
+        mech = get_mechanism(group.signature.mechanism)
+        native = group_is_native(mech, group.signature)
+        entries = list(group.entries)
+        with self._lock:
+            # coalesced fill is recorded per flushed group (pre-chunking):
+            # the histogram measures coalescing quality, not shard fan-out
+            self._fill[group.size] += 1
+        if mech.backend == "numpy" and len(entries) > 1 and self._pool.n > 1:
+            n_chunks = min(self._pool.n, len(entries))
+            base = self._pool.next_chunk_base()
+            for j in range(n_chunks):
+                chunk = entries[j::n_chunks]
+                shard = (base + j) % self._pool.n
+                self._pool.submit_group(
+                    shard, mechanism=mech.name, native=False,
+                    cause=group.cause, sig_key=group.signature.key,
+                    requests=[e.payload.request for e in chunk],
+                    ctx=_PendingGroup(entries=chunk, mechanism=mech.name,
+                                      native=False, shard=shard))
+        else:
+            shard = shard_of(group.signature, self._pool.n)
+            self._pool.submit_group(
+                shard, mechanism=mech.name, native=native,
+                cause=group.cause, sig_key=group.signature.key,
+                requests=[e.payload.request for e in entries],
+                ctx=_PendingGroup(entries=entries, mechanism=mech.name,
+                                  native=native, shard=shard))
+
+    def _on_pool_reply(self, ctx, payload, error) -> None:
+        """Collector-thread resolution of one shard reply (or abandonment).
+
+        Mirrors the thread tier's ``_execute_group`` / ``_execute_sm``
+        bookkeeping: stats, per-shard latency reservoirs, parent-side
+        archival for sink types that cannot be re-homed per shard, and
+        ticket resolution — success, the rebuilt shard exception, or
+        :class:`ServiceStopped` at shutdown.
+        """
+        now = time.monotonic()
+        if isinstance(ctx, _PendingSm):
+            job = ctx.job
+            counters = self._shard_counters.setdefault(ctx.shard, Counter())
+            if error is not None:
+                with self._lock:
+                    self._stats["failed"] += job.warps
+                    self._stats["inflight"] -= job.warps
+                    counters["failed"] += job.warps
+                job.ticket._future.set_exception(error)
+                return
+            sm = payload
+            if self._archive is not None and not self._pool.shard_archival:
+                cell = next_sm_cell_id()
+                tmeta = timing_meta(sm)
+                for w, (wreq, wres) in enumerate(zip(sm.requests, sm.warps)):
+                    self._archive_result(
+                        wres, sm.inner,
+                        meta=sm_run_meta(sm.inner, wreq, warp=w,
+                                         n_warps=sm.n_warps,
+                                         policy=sm.policy, cell=cell,
+                                         timing=tmeta))
+            job.ticket._future.set_result(sm)
+            with self._lock:
+                self._stats["completed"] += job.warps
+                self._stats["inflight"] -= job.warps
+                self._stats["sm_jobs"] += 1
+                self._stats["sm_cycles"] += sm.cycles
+                self._stats["sm_busy_cycles"] += sm.busy_cycles
+                self._stats["sm_issue_stall_cycles"] += sm.issue_stall_cycles
+                self._stats["sm_scoreboard_stall_cycles"] += \
+                    sm.scoreboard_stall_cycles
+                self._stats["sm_memory_stall_cycles"] += sm.memory_stall_cycles
+                counters["completed"] += job.warps
+                self._shard_latencies.setdefault(
+                    ctx.shard, deque(maxlen=4096)).append(
+                        now - job.ticket.submitted_at)
+            return
+        # group reply
+        n = len(ctx.entries)
+        counters = self._shard_counters.setdefault(ctx.shard, Counter())
+        if error is not None:
+            with self._lock:
+                self._stats["failed"] += n
+                self._stats["inflight"] -= n
+                counters["failed"] += n
+            for e in ctx.entries:
+                e.payload.ticket._future.set_exception(error)
+            return
+        results = payload
+        if self._archive is not None and not self._pool.shard_archival:
+            for e, res in zip(ctx.entries, results):
+                self._archive_result(res, ctx.mechanism, e.payload.request)
+        for e, res in zip(ctx.entries, results):
+            e.payload.ticket._future.set_result(res)
+        with self._lock:
+            self._stats["completed"] += n
+            self._stats["inflight"] -= n
+            self._stats["batches"] += 1
+            if ctx.native:
+                self._stats["native_batches"] += 1
+                self._stats["native_warps"] += n
+            counters["completed"] += n
+            lat = self._shard_latencies.setdefault(ctx.shard,
+                                                   deque(maxlen=4096))
+            for e in ctx.entries:
+                lat.append(now - e.submitted_at)
 
     def _flusher_loop(self) -> None:
         while True:
@@ -526,5 +876,16 @@ class SimulationService:
         if meta is None:
             assert req is not None
             meta = run_meta(mechanism, req)   # replayable begin event
+        from repro.engine.compile_cache import installed_cache
+        if installed_cache() is not None:
+            # warm-start deployments stamp the compile-cache counters onto
+            # every archived run, so an operator can read re-trace behavior
+            # straight off the archive
+            from repro.engine.adapters import batch_cache_stats
+            s = batch_cache_stats()
+            meta = {**meta, "compile_cache": {
+                "hits": s["hits"], "misses": s["misses"],
+                "disk_hits": s["disk_hits"],
+                "trace_time_s": round(s["trace_time_s"], 6)}}
         with self._archive_lock:
             feed_result(self._archive, result, meta)

@@ -26,10 +26,11 @@ import numpy as np
 
 from repro.core.isa import MachineConfig
 from repro.engine.adapters import padded_len
+from repro.engine.compile_cache import affinity_token, shard_of_token
 from repro.engine.registry import Mechanism, get_mechanism
 from repro.engine.types import SimRequest
 
-__all__ = ["ExecSignature", "signature_of", "meta_key"]
+__all__ = ["ExecSignature", "signature_of", "meta_key", "shard_of"]
 
 
 def meta_key(meta: Mapping[str, Any]) -> tuple[tuple[str, str], ...]:
@@ -74,6 +75,22 @@ class ExecSignature:
                 + ("" if self.record_trace else "/notrace")
                 + (f"/skip{len(self.skip_pcs)}" if self.skip_pcs else "")
                 + (f"/{opts}" if opts else ""))
+
+    @property
+    def token(self) -> str:
+        """The compiled-state locality token of this signature — the same
+        string the persistent compile cache stamps into its manifest, so
+        process-tier routing and warm-start sharding agree on which shard
+        owns which hot jit/executable cache state."""
+        return affinity_token(self.mechanism, self.cfg, self.majority_first,
+                              self.pad_len)
+
+
+def shard_of(sig: ExecSignature, n_shards: int) -> int:
+    """Signature-affine shard assignment: a stable crc32 of the locality
+    token, mod the pool size.  Stable across processes and runs (unlike the
+    builtin ``hash``, which is salted per interpreter)."""
+    return shard_of_token(sig.token, n_shards)
 
 
 def signature_of(mechanism: "str | Mechanism", req: SimRequest) -> ExecSignature:
