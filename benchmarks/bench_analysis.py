@@ -1,0 +1,156 @@
+"""Static-analysis benchmarks: analyzer throughput + sidecar similarity.
+
+Two sections:
+
+* **analyzer** — cold-cache ``analyze_program`` over the full benchmark
+  suite plus every ``tests/progen.py`` distribution (the same corpus the
+  conformance gate walks), reporting programs/s.  The acceptance gate
+  (ISSUE 9) asserts >= 1k programs/s *with caches cleared* — static
+  admission must be invisible next to simulation cost, and the service
+  runs it on every submit.
+* **similarity** — "find archived runs whose control flow resembles this
+  program", both ways: ranking CFG fingerprints straight from the sidecar
+  index (``ArchiveIndex.rank_similar``, nothing replayed, no archive file
+  opened) versus the replay-based baseline (re-execute every archived run
+  and Levenshtein-diff its trace against the query's).  The acceptance
+  gate asserts the index path is >= 100x faster — what makes "search the
+  fleet's archive for this pathology" interactive instead of a batch job.
+
+Run:   PYTHONPATH=src python benchmarks/bench_analysis.py
+CI:    PYTHONPATH=src python benchmarks/bench_analysis.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.analysis import analyze_program, fingerprint
+from repro.analysis.fingerprint import _CACHE as _FP_CACHE
+from repro.analysis.passes import _analyze_cached
+from repro.archive import ArchiveIndex, ArchiveReader, request_from_meta
+from repro.core import MachineConfig
+from repro.core.programs import make_suite, spinlock_program
+from repro.core.trace import levenshtein, trace_tokens
+from repro.engine import RotatingJsonlSink, Simulator
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from tests.progen import corpus  # noqa: E402  (repo-root import, like tests)
+
+GATE_PROGRAMS_PER_S = 1000.0     # acceptance: cold analyzer throughput
+GATE_SIM_SPEEDUP = 100.0         # acceptance: sidecar rank vs replay+diff
+
+
+def _clear_caches() -> None:
+    _analyze_cached.cache_clear()
+    _FP_CACHE.clear()
+
+
+def bench_analyzer(n_seeds: int, *, repeats: int = 3) -> None:
+    cfg = MachineConfig(n_threads=8)
+    progs = [(b.name, b.program, cfg) for b in make_suite(cfg)]
+    progs += corpus(n_seeds)
+    print(f"== analyzer: cold-cache analyze_program over "
+          f"{len(progs)} programs (suite + progen x{n_seeds} seeds) ==")
+    best = float("inf")
+    n_diags = n_errors = 0
+    for _ in range(repeats):
+        _clear_caches()
+        t0 = time.perf_counter()
+        reports = [analyze_program(p, c, name=name) for name, p, c in progs]
+        best = min(best, time.perf_counter() - t0)
+        n_diags = sum(len(r.diagnostics) for r in reports)
+        n_errors = sum(len(r.errors) for r in reports)
+    rate = len(progs) / max(best, 1e-9)
+    print(f"{'programs':>9} {'wall_s':>9} {'progs/s':>10} "
+          f"{'diags':>6} {'errors':>7}")
+    print(f"{len(progs):>9} {best:>9.3f} {rate:>10.0f} "
+          f"{n_diags:>6} {n_errors:>7}")
+    assert n_errors == 0, "conformance: suite + progen must be error-free"
+    assert rate >= GATE_PROGRAMS_PER_S, (
+        f"acceptance gate: cold analyzer must sustain "
+        f">={GATE_PROGRAMS_PER_S:.0f} programs/s; measured {rate:.0f}")
+    print(f"gate OK: >= {GATE_PROGRAMS_PER_S:.0f} programs/s cold "
+          f"({rate:.0f}/s), zero errors")
+
+    # warm path (the service's steady state: repeated signatures)
+    t0 = time.perf_counter()
+    for name, p, c in progs:
+        analyze_program(p, c, name=name)
+    t_warm = time.perf_counter() - t0
+    print(f"warm (cached): {len(progs) / max(t_warm, 1e-9):.0f} progs/s")
+
+
+def bench_similarity(n_runs: int) -> None:
+    """Sidecar fingerprint ranking vs replay-every-run-and-diff."""
+    cfg = MachineConfig(n_threads=8, mem_size=64, max_steps=8192)
+    suite = make_suite(cfg, datasets=1)
+    sim = Simulator("hanoi")
+    query = spinlock_program()
+    print(f"\n== similarity: sidecar rank vs replay+diff "
+          f"({n_runs} archived runs) ==")
+    with tempfile.TemporaryDirectory() as tmp:
+        sink = RotatingJsonlSink(tmp, max_bytes=1 << 22)
+        for i in range(n_runs):
+            sim.run(suite[i % len(suite)], cfg, sink=sink)
+        sink.flush()
+        sink.close()
+        idx = ArchiveIndex.ensure(tmp)               # built once, off-path
+        assert len(idx) == n_runs
+        assert all(e.fp is not None for e in idx.entries)
+
+        # index path: fingerprint the query, rank from the sidecar alone
+        repeats = 10
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            _clear_caches()                          # no free rides
+            ranked = idx.rank_similar(fingerprint(query))
+        t_index = (time.perf_counter() - t0) / repeats
+        assert len(ranked) == n_runs
+
+        # replay baseline: re-execute every archived run, Levenshtein its
+        # trace against the query's (how you'd compare without fingerprints)
+        q_tokens = trace_tokens(list(sim.run(query, cfg).trace))
+        runs = ArchiveReader(tmp).runs()
+        t0 = time.perf_counter()
+        scored = []
+        for run in runs:
+            req = request_from_meta(run.meta)
+            res = sim.run(req.program, req.cfg)
+            dist = int(levenshtein(trace_tokens(list(res.trace)), q_tokens))
+            scored.append((dist, run.meta.get("program", "")))
+        t_replay = time.perf_counter() - t0
+        scored.sort()
+
+        speedup = t_replay / max(t_index, 1e-9)
+        print(f"{'path':>12} {'wall_s':>10}")
+        print(f"{'sidecar':>12} {t_index:>10.5f}")
+        print(f"{'replay+diff':>12} {t_replay:>10.3f}")
+        print(f"nearest by fingerprint: {ranked[0][0]} d={ranked[0][1]:.4f}; "
+              f"nearest by replay: {scored[0][1]} lev={scored[0][0]}")
+        print(f"speedup: {speedup:.0f}x")
+        assert speedup >= GATE_SIM_SPEEDUP, (
+            f"acceptance gate: sidecar similarity must be "
+            f">={GATE_SIM_SPEEDUP:.0f}x replay-based comparison; "
+            f"measured {speedup:.1f}x")
+        print(f"gate OK: >= {GATE_SIM_SPEEDUP:.0f}x over replay")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (still enforces the >=1k programs/s "
+                         "and >=100x gates)")
+    args = ap.parse_args()
+    if args.smoke:
+        bench_analyzer(n_seeds=40, repeats=1)
+        bench_similarity(n_runs=120)
+    else:
+        bench_analyzer(n_seeds=120)
+        bench_similarity(n_runs=200)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,13 @@ any mechanism by name:
 10. scale out: a 2-process service (``procs=2`` — signature-affine shard
     routing, numpy groups chunked across shards) warmed from a persistent
     compile cache (``warm_start=``), then restarted to prove the
-    zero-re-trace contract from its own cache counters.
+    zero-re-trace contract from its own cache counters;
+11. statically verify programs without running them (``repro.analysis``):
+    lint the Fig 6 ablation (its missing BREAK is a ``reconvergence``
+    error), watch the service reject it at admission with the full
+    diagnostic report on the ticket, fix it, then rank archived runs by
+    control-flow similarity from the sidecar index alone — the paper's
+    pathologies, searchable without replaying a trace.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (the ``main()`` guard is required: section 10 spawns worker processes and
@@ -253,6 +259,53 @@ def main():
           f"({st2.warm_loaded} deserialized, {st2.warm_retraced} re-traced), "
           f"serve-time traces={st2.cache_misses}")
     assert st2.cache_misses == st2.warm_retraced         # zero re-trace contract
+
+    # --- 11. static analysis: lint -> admission rejection -> similarity ---------
+    from repro.analysis import StaticAnalysisError, analyze_program
+    from repro.core.programs import fig5_program, fig6_no_break_program
+
+    broken = fig6_no_break_program()                 # Fig 6 minus its BREAK
+    report = analyze_program(broken, CFG, name="fig6-no-break")
+    print("\n=== static analysis: the Fig 6 ablation fails the verifier ===")
+    print(report.render())
+    assert not report.ok and "reconvergence" in report.codes()
+
+    # the service refuses it at admission — no shard ever sees the request;
+    # the ticket carries the same structured report as its exception
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        bad_ticket = svc.submit(broken, CFG, name="fig6-no-break")
+        good_ticket = svc.submit(fig6_program(), CFG, name="fig6")
+        svc.flush()
+        rejection = bad_ticket.exception()
+        assert isinstance(rejection, StaticAnalysisError)
+        assert not rejection.report.ok
+        assert good_ticket.result().ok               # the BREAK makes it legal
+        st11 = svc.stats()
+    print(f"service admission: submitted={st11.submitted} "
+          f"rejected={st11.rejected} completed={st11.completed} "
+          f"(the broken program never reached a shard)")
+    assert st11.rejected == 1 and st11.failed == 0
+
+    # archived nearest neighbors, ranked from the sidecar index alone —
+    # no archive file opened, nothing replayed
+    from repro.analysis import fingerprint
+    from repro.archive import ArchiveIndex
+
+    with tempfile.TemporaryDirectory() as tmp11:
+        arch11 = RotatingJsonlSink(tmp11)
+        lab = Simulator("hanoi", sink=arch11)
+        for b in make_suite(CFG, datasets=1):
+            lab.run(b, CFG)
+        arch11.flush()
+        arch11.close()
+        idx = ArchiveIndex.ensure(tmp11)             # entries carry CFG fps
+        ranked = idx.rank_similar(fingerprint(fig5_program()), top=3)
+        by_id = {e.run_id: e.program for e in idx.entries}
+        print(f"nearest archived control flow to Fig 5 "
+              f"({len(idx)} runs indexed, sidecar only):")
+        for rid, d in ranked:
+            print(f"  {rid}  d={d:.4f}  {by_id[rid]}")
+        assert by_id[ranked[0][0]] == "FIG5" and ranked[0][1] == 0.0
 
     print("\nquickstart OK")
 

@@ -1,0 +1,19 @@
+; Fig 3/7 spinlock: ATOMCAS poll with compiler-placed YIELD.
+; Lint it:  PYTHONPATH=src python -m repro.analysis examples/spinlock.asm --fingerprint
+    MOV R0, 0           ; mutex address
+    MOV R1, 1           ; counter address
+    MOV R3, 0           ; CAS compare value
+    MOV R4, 1           ; CAS swap value
+    BSSY B0, esync
+loop:
+    YIELD               ; SS VI-C: switch to the sibling (lock holder) path
+    ATOMCAS R2, [R0], R3, R4
+    ISETP.NE P0, R2, 0  ; P0 true -> failed to acquire
+    @P0 BRA loop
+    LDG R5, [R1]        ; critical section: counter++ (non-atomic on purpose)
+    IADDI R5, R5, 1
+    STG [R1], R5
+    ATOMEXCH R6, [R0], R3   ; release the lock
+esync:
+    BSYNC B0
+    EXIT

@@ -1,0 +1,30 @@
+"""repro.analysis — static control-flow verification and CFG fingerprints.
+
+Analyze encoded SASS-lite programs *without executing them*:
+
+>>> from repro.analysis import analyze_program
+>>> report = analyze_program(prog)
+>>> report.ok, report.codes()
+(True, ())
+
+Layers above consume this three ways: `Simulator.run(..., verify=True)`
+and `SimulationService` admission reject ``error``-level programs before
+any shard burns fuel; the archive stamps each run's CFG fingerprint into
+begin-event meta and the sidecar index; ``python -m repro.archive similar``
+ranks archived runs by :func:`fingerprint.distance` without replaying.
+``python -m repro.analysis`` is the standalone lint CLI.
+
+See docs/analysis.md for the diagnostic catalog and fingerprint format.
+"""
+from .cfg import SINK, Loop, ProgramCFG
+from .fingerprint import (FEATURES, FP_VERSION, distance, fingerprint,
+                          fingerprint_meta, rank)
+from .passes import (AnalysisReport, Diagnostic, Severity,
+                     StaticAnalysisError, analyze_program, verify_program)
+
+__all__ = [
+    "AnalysisReport", "Diagnostic", "FEATURES", "FP_VERSION", "Loop",
+    "ProgramCFG", "SINK", "Severity", "StaticAnalysisError",
+    "analyze_program", "distance", "fingerprint", "fingerprint_meta",
+    "rank", "verify_program",
+]

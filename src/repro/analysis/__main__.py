@@ -1,0 +1,88 @@
+"""Lint CLI: ``python -m repro.analysis [files.asm ...] [--suite]``.
+
+Assembles each ``.asm`` file (surfacing :class:`repro.core.asm.AsmError`
+with its line/column context) and/or walks the built-in benchmark suite,
+runs the static verifier, and prints every diagnostic as
+``pc NNNN  [severity] code: message`` over the disassembled instruction.
+
+Exit status: 0 clean, 1 when any program has errors (or, with
+``--strict``, warnings), 2 when an input fails to assemble.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.core.asm import AsmError, assemble
+from repro.core.isa import MachineConfig
+
+from .fingerprint import FEATURES, FP_VERSION, fingerprint
+from .passes import analyze_program
+
+
+def _programs(ns) -> "list[tuple[str, object]]":
+    progs: list[tuple[str, object]] = []
+    for path in ns.files:
+        text = Path(path).read_text()
+        try:
+            progs.append((path, assemble(text)))
+        except AsmError as exc:
+            print(f"{path}: assembly failed\n{exc}", file=sys.stderr)
+            raise SystemExit(2)
+    if ns.suite:
+        from repro.core.programs import make_suite
+        for bench in make_suite(MachineConfig(n_threads=ns.threads)):
+            progs.append((f"suite:{bench.name}", bench.program))
+    return progs
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify SASS-lite programs (no execution)")
+    ap.add_argument("files", nargs="*", help=".asm files to lint")
+    ap.add_argument("--suite", action="store_true",
+                    help="also lint the built-in benchmark suite")
+    ap.add_argument("--threads", type=int, default=32,
+                    help="warp width for --suite programs (default 32)")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat warnings as failures")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit one JSON object per program")
+    ap.add_argument("--fingerprint", action="store_true",
+                    help="also print each program's CFG fingerprint")
+    ns = ap.parse_args(argv)
+    if not ns.files and not ns.suite:
+        ap.error("nothing to lint: pass .asm files and/or --suite")
+
+    progs = _programs(ns)
+    failed = False
+    for name, prog in progs:
+        report = analyze_program(prog, name=name)
+        bad = report.errors + (report.warnings if ns.strict else ())
+        failed = failed or bool(bad)
+        if ns.as_json:
+            print(json.dumps({
+                "name": name,
+                "ok": not bad,
+                "diagnostics": [
+                    {"severity": str(d.severity), "code": d.code,
+                     "pc": d.pc, "message": d.message, "line": d.line}
+                    for d in report.diagnostics],
+                "fingerprint": {"v": FP_VERSION,
+                                "features": dict(zip(FEATURES,
+                                                     report.fingerprint))},
+            }))
+            continue
+        print(report.render())
+        if ns.fingerprint:
+            fp = fingerprint(prog)
+            pairs = ", ".join(f"{k}={v:g}" for k, v in zip(FEATURES, fp))
+            print(f"  fingerprint v{FP_VERSION}: {pairs}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,11 @@ matching read path, closing the write-path/read-path asymmetry:
   the sidecar ``{prefix}.index.jsonl`` mapping run id → byte span
   (rebuilt automatically on fingerprint mismatch) and the compaction pass
   that rewrites rotated files dropping corrupt/interrupted debris while
-  preserving intact runs byte-for-byte;
+  preserving intact runs byte-for-byte; each entry also carries the run's
+  static CFG fingerprint (:mod:`repro.analysis.fingerprint`), so
+  :meth:`ArchiveIndex.rank_similar` — CLI ``python -m repro.archive
+  similar DIR --to <run_id|file.asm>`` — ranks archived runs by
+  control-flow similarity from the sidecar alone, replaying nothing;
 * :class:`Replayer` — reconstructs each run's
   :class:`~repro.engine.types.SimRequest`, re-executes it under any
   registered mechanism (batched through ``Simulator.run_batch`` or a
@@ -42,7 +46,7 @@ Quick start::
     run = ArchiveReader("sim-archive").get("run-000042")  # O(1), indexed
 
 CLI: ``python -m repro.archive DIR [--mechanism NAME] [--expect-zero]``,
-``python -m repro.archive index|get|compact DIR ...``, or
+``python -m repro.archive index|get|compact|similar DIR ...``, or
 ``python -m repro.launch.serve --mode replay --archive-dir DIR [--watch]``.
 """
 from .index import ArchiveIndex, CompactReport, IndexEntry, compact

@@ -10,6 +10,8 @@ Usage::
     python -m repro.archive get DIR run-000042        # O(1) indexed lookup
     python -m repro.archive get DIR run-000042 --json # full run as JSON
     python -m repro.archive compact DIR               # drop debris, reindex
+    python -m repro.archive similar DIR --to run-000042    # CF neighbors
+    python -m repro.archive similar DIR --to prog.asm --top 5
 
 ``--expect-zero`` exits non-zero unless at least one run replayed and every
 replayed run came back with exactly 0.0 discrepancy — the self-replay
@@ -27,7 +29,7 @@ from .index import ArchiveIndex, compact
 from .reader import ArchiveReader
 from .replay import Replayer
 
-_SUBCOMMANDS = ("index", "compact", "get")
+_SUBCOMMANDS = ("index", "compact", "get", "similar")
 
 
 def _main_replay(argv: "list[str]") -> int:
@@ -174,11 +176,77 @@ def _main_compact(argv: "list[str]") -> int:
     return 0
 
 
+def _main_similar(argv: "list[str]") -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.archive similar",
+        description="Rank archived runs by static control-flow similarity "
+                    "to a query — a run id or a .asm file — using the CFG "
+                    "fingerprints in the sidecar index (built/rebuilt on "
+                    "demand).  Nothing is replayed and no archive file is "
+                    "opened: the ranking reads the sidecar alone.")
+    ap.add_argument("directory")
+    ap.add_argument("--to", required=True, metavar="RUN_ID|FILE.asm",
+                    help="query: an indexed run id (e.g. run-000042) or a "
+                         "path to a SASS-lite .asm file")
+    ap.add_argument("--top", type=int, default=10,
+                    help="show the N nearest runs (default 10; 0 = all)")
+    ap.add_argument("--prefix", default="traces")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the ranking as one JSON object")
+    args = ap.parse_args(argv)
+
+    idx = ArchiveIndex.ensure(args.directory, args.prefix)
+    if args.to.endswith(".asm"):
+        from repro.analysis import fingerprint
+        from repro.core.asm import AsmError, assemble
+        try:
+            query_fp = fingerprint(assemble(open(args.to).read()))
+        except OSError as exc:
+            print(f"[similar] cannot read {args.to}: {exc}", file=sys.stderr)
+            return 1
+        except AsmError as exc:
+            print(f"[similar] {args.to}: assembly failed\n{exc}",
+                  file=sys.stderr)
+            return 1
+    else:
+        try:
+            entry = idx.lookup(args.to)
+        except KeyError as exc:
+            print(f"[similar] {exc.args[0]}", file=sys.stderr)
+            return 1
+        if entry.fp is None:
+            print(f"[similar] {args.to} has no fingerprint (undecodable "
+                  f"begin meta); re-archive or query by .asm file",
+                  file=sys.stderr)
+            return 1
+        query_fp = entry.fp
+
+    ranked = idx.rank_similar(query_fp, top=args.top or None)
+    if args.as_json:
+        print(json.dumps({"query": args.to,
+                          "ranked": [{"id": rid, "distance": round(d, 6)}
+                                     for rid, d in ranked]}))
+        return 0
+    if not ranked:
+        print("[similar] no fingerprinted runs in the index")
+        return 0
+    print(f"[similar] {len(idx)} indexed run(s); "
+          f"{len(ranked)} nearest to {args.to}:")
+    by_id = {e.run_id: e for e in idx.entries}
+    for rank_i, (rid, d) in enumerate(ranked, start=1):
+        e = by_id[rid]
+        print(f"  {rank_i:3d}. {rid}  d={d:.4f}  "
+              f"program={e.program or '<anonymous>'} "
+              f"mechanism={e.mechanism} status={e.status}")
+    return 0
+
+
 def main(argv: "list[str] | None" = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] in _SUBCOMMANDS:
         return {"index": _main_index, "get": _main_get,
-                "compact": _main_compact}[argv[0]](argv[1:])
+                "compact": _main_compact,
+                "similar": _main_similar}[argv[0]](argv[1:])
     return _main_replay(argv)
 
 

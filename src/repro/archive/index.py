@@ -16,11 +16,14 @@ archive (compaction) renumbers them, and the index is rebuilt alongside.
 
 Sidecar format (JSONL): a header line
 
-    {"kind": "repro-archive-index", "version": 1, "prefix": ...,
+    {"kind": "repro-archive-index", "version": 2, "prefix": ...,
      "files": [[name, bytes], ...], "runs": N}
 
 followed by one entry line per run (``id``, ``file``, ``offset``,
-``length``, ``line``, ``mechanism``, ``program``, ``status``).  The
+``length``, ``line``, ``mechanism``, ``program``, ``status``, ``fp`` —
+the run's static CFG fingerprint, see
+:mod:`repro.analysis.fingerprint`; it is what ``python -m repro.archive
+similar`` ranks on without opening the archive files at all).  The
 ``files`` fingerprint — (name, size) of every rotated file at build time —
 is how staleness is detected: a grown, rotated, or compacted archive no
 longer matches, and :meth:`ArchiveIndex.ensure` (and ``ArchiveReader.get``)
@@ -48,7 +51,9 @@ __all__ = ["ArchiveIndex", "CompactReport", "IndexEntry", "compact",
            "index_path", "scan_archive"]
 
 INDEX_KIND = "repro-archive-index"
-INDEX_VERSION = 1
+# v2 added the per-run "fp" CFG fingerprint; older sidecars load as None
+# and ensure() transparently rebuilds them with fingerprints filled in.
+INDEX_VERSION = 2
 
 
 def index_path(directory: str, prefix: str = "traces") -> str:
@@ -68,21 +73,53 @@ class IndexEntry:
     mechanism: str      # begin-meta mechanism (what the run was served as)
     program: str
     status: str
+    fp: tuple[float, ...] | None = None   # CFG fingerprint (None: unknown)
 
     def to_json(self) -> dict[str, Any]:
-        return {"id": self.run_id, "file": self.file, "offset": self.offset,
-                "length": self.length, "line": self.line,
-                "mechanism": self.mechanism, "program": self.program,
-                "status": self.status}
+        out = {"id": self.run_id, "file": self.file, "offset": self.offset,
+               "length": self.length, "line": self.line,
+               "mechanism": self.mechanism, "program": self.program,
+               "status": self.status}
+        if self.fp is not None:
+            out["fp"] = [round(float(x), 6) for x in self.fp]
+        return out
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "IndexEntry":
+        fp = obj.get("fp")
         return cls(run_id=str(obj["id"]), file=str(obj["file"]),
                    offset=int(obj["offset"]), length=int(obj["length"]),
                    line=int(obj["line"]),
                    mechanism=str(obj.get("mechanism") or ""),
                    program=str(obj.get("program") or ""),
-                   status=str(obj.get("status") or ""))
+                   status=str(obj.get("status") or ""),
+                   fp=None if fp is None else tuple(float(x) for x in fp))
+
+
+def _begin_fp(ev: Mapping[str, Any]) -> tuple[float, ...] | None:
+    """The run's CFG fingerprint from its begin event, best effort.
+
+    Prefers the stamped ``cfg_fp`` (current :data:`~repro.analysis.
+    fingerprint.FP_VERSION` only — a stamp from an older format is
+    recomputed, never compared across versions); falls back to computing
+    from the archived ``replay.program`` for pre-fingerprint archives.
+    Never raises: a malformed stamp must not void an otherwise-intact run.
+    """
+    from repro.analysis.fingerprint import FP_VERSION, fingerprint
+    try:
+        stamp = ev.get("cfg_fp")
+        if isinstance(stamp, Mapping) and stamp.get("v") == FP_VERSION:
+            return tuple(float(x) for x in stamp["f"])
+    except (KeyError, TypeError, ValueError):
+        pass
+    try:
+        program = (ev.get("replay") or {}).get("program")
+        if program:
+            import numpy as np
+            return fingerprint(np.asarray(program, dtype=np.int32))
+    except Exception:
+        pass
+    return None
 
 
 def scan_archive(directory: str, prefix: str = "traces",
@@ -109,9 +146,10 @@ def scan_archive(directory: str, prefix: str = "traces",
         with open(path, "rb") as fh:
             offset = 0
             lineno = 0
-            # (begin offset, begin lineno, mechanism, program) of the run
-            # in progress, or None outside a run
-            cur: tuple[int, int, str, str] | None = None
+            # (begin offset, begin lineno, mechanism, program, fp) of the
+            # run in progress, or None outside a run
+            cur: tuple[int, int, str, str,
+                       tuple[float, ...] | None] | None = None
             for raw in fh:
                 lineno += 1
                 start = offset
@@ -127,7 +165,8 @@ def scan_archive(directory: str, prefix: str = "traces",
                     if kind == "begin":
                         cur = (start, lineno,
                                str(ev.get("mechanism") or ""),
-                               str(ev.get("program") or ""))
+                               str(ev.get("program") or ""),
+                               _begin_fp(ev))
                         continue
                     if kind == "issue":
                         # same field validation the reader applies: an
@@ -149,7 +188,8 @@ def scan_archive(directory: str, prefix: str = "traces",
                                 mechanism=cur[2] or str(ev.get("mechanism")
                                                         or ""),
                                 program=cur[3],
-                                status=str(ev.get("status") or "")))
+                                status=str(ev.get("status") or ""),
+                                fp=cur[4]))
                             ordinal += 1
                         cur = None
                         continue
@@ -194,6 +234,19 @@ class ArchiveIndex:
             cache = {e.run_id: e for e in self.entries}
             self.__dict__["_by_id_cache"] = cache
         return cache
+
+    def rank_similar(self, query_fp, *, top: int | None = None,
+                     ) -> list[tuple[str, float]]:
+        """Archived runs ranked by ascending control-flow distance to
+        ``query_fp`` (see :func:`repro.analysis.fingerprint.distance`) —
+        ``(run_id, distance)`` pairs, computed from the sidecar alone (no
+        archive file is opened, nothing is replayed).  Entries without a
+        fingerprint (undecodable pre-fingerprint begin meta) are skipped.
+        A query taken from an indexed run ranks that run first at exactly
+        0.0."""
+        from repro.analysis.fingerprint import rank
+        return rank(query_fp, ((e.run_id, e.fp) for e in self.entries),
+                    top=top)
 
     def fresh(self) -> bool:
         """Whether the fingerprint still matches the on-disk files."""

@@ -32,7 +32,48 @@ _MEM_RE = re.compile(r"^\[R(\d+)(?:\s*\+\s*(-?\w+))?\]$")
 
 
 class AsmError(ValueError):
-    pass
+    """An assembly error with source context.
+
+    ``reason`` is the bare message; ``lineno``/``col`` (1-based) and
+    ``source`` (the raw offending source line) are attached by
+    :func:`assemble` when the error surfaces through it, and the formatted
+    ``str`` then carries a ``line L, col C:`` prefix plus a caret snippet —
+    so a one-character typo in a 300-line listing is a one-glance fix.
+    """
+
+    def __init__(self, reason: str, *, lineno: "int | None" = None,
+                 col: "int | None" = None, source: "str | None" = None,
+                 token: "str | None" = None) -> None:
+        self.reason = reason
+        self.lineno = lineno
+        self.col = col
+        self.source = source
+        self.token = token        # offending token, for column recovery
+        super().__init__(self._format())
+
+    def _format(self) -> str:
+        loc = ""
+        if self.lineno is not None:
+            loc = f"line {self.lineno}"
+            if self.col is not None:
+                loc += f", col {self.col}"
+            loc += ": "
+        msg = f"{loc}{self.reason}"
+        if self.source is not None:
+            msg += f"\n    {self.source}"
+            if self.col is not None:
+                msg += "\n    " + " " * (self.col - 1) + "^"
+        return msg
+
+    def with_context(self, lineno: int, source: str) -> "AsmError":
+        """A copy of this error annotated with its source coordinates."""
+        col = None
+        if self.token:
+            at = source.find(self.token)
+            if at >= 0:
+                col = at + 1
+        return AsmError(self.reason, lineno=lineno, col=col,
+                        source=source, token=self.token)
 
 
 def _parse_pred(tok: str) -> int:
@@ -41,7 +82,7 @@ def _parse_pred(tok: str) -> int:
     if neg:
         tok = tok[1:]
     if not re.fullmatch(r"P\d+", tok):
-        raise AsmError(f"bad predicate {tok!r}")
+        raise AsmError(f"bad predicate {tok!r}", token=tok)
     return (-1 if neg else 1) * (int(tok[1:]) + 1)
 
 
@@ -51,7 +92,7 @@ def _is_pred(tok: str) -> bool:
 
 def _reg(tok: str, kind: str) -> int:
     if not re.fullmatch(rf"{kind}\d+", tok):
-        raise AsmError(f"expected {kind}-register, got {tok!r}")
+        raise AsmError(f"expected {kind}-register, got {tok!r}", token=tok)
     return int(tok[1:])
 
 
@@ -60,12 +101,17 @@ def _int(tok: str) -> int:
 
 
 def assemble(text: str) -> np.ndarray:
-    """Assemble SASS-lite text into an ``int32[L, 8]`` program table."""
+    """Assemble SASS-lite text into an ``int32[L, 8]`` program table.
+
+    Errors raise :class:`AsmError` annotated with the 1-based source line
+    number, the offending column where recoverable, and the raw source line.
+    """
     lines: list[tuple[str, list[str]]] = []   # (mnemonic, operand tokens)
     guards: list[int] = []
     labels: dict[str, int] = {}
+    srcs: list[tuple[int, str]] = []          # (1-based lineno, raw line)
 
-    for raw in text.splitlines():
+    for lineno, raw in enumerate(text.splitlines(), start=1):
         line = raw.split(";")[0].split("#")[0].strip()
         if not line:
             continue
@@ -76,12 +122,16 @@ def assemble(text: str) -> np.ndarray:
         guard = 0
         if line.startswith("@"):
             gtok, line = line.split(None, 1)
-            guard = _parse_pred(gtok[1:])
+            try:
+                guard = _parse_pred(gtok[1:])
+            except AsmError as exc:
+                raise exc.with_context(lineno, raw) from None
         parts = line.split(None, 1)
         mnem = parts[0].upper()
         ops = [t.strip() for t in parts[1].split(",")] if len(parts) > 1 else []
         lines.append((mnem, ops))
         guards.append(guard)
+        srcs.append((lineno, raw))
 
     def res(tok: str, pc: int) -> int:
         """Resolve a label or integer literal."""
@@ -90,10 +140,10 @@ def assemble(text: str) -> np.ndarray:
         try:
             return _int(tok)
         except ValueError:
-            raise AsmError(f"unknown label/literal {tok!r} at pc {pc}") from None
+            raise AsmError(f"unknown label/literal {tok!r} at pc {pc}",
+                           token=tok) from None
 
-    instrs: list[Instr] = []
-    for pc, ((mnem, ops), guard) in enumerate(zip(lines, guards)):
+    def build(pc: int, mnem: str, ops: "list[str]", guard: int) -> Instr:
         p2 = 0
         # a leading predicate operand is the second predicate (SS V-A)
         if ops and _is_pred(ops[0]) and not mnem.startswith("ISETP"):
@@ -103,7 +153,8 @@ def assemble(text: str) -> np.ndarray:
         def mem(tok: str) -> tuple[int, int]:
             m = _MEM_RE.match(tok.replace(" ", ""))
             if not m:
-                raise AsmError(f"bad memory operand {tok!r} at pc {pc}")
+                raise AsmError(f"bad memory operand {tok!r} at pc {pc}",
+                               token=tok)
             return int(m.group(1)), (res(m.group(2), pc) if m.group(2) else 0)
 
         k = dict(pred1=guard, pred2=p2)
@@ -174,25 +225,48 @@ def assemble(text: str) -> np.ndarray:
             i = Instr(Op[mnem], dst=_reg(ops[0], "R"), src0=r,
                       src1=_reg(ops[2], "R"), src2=src2, imm=off, **k)
         else:
-            raise AsmError(f"unknown mnemonic {mnem!r} at pc {pc}")
-        instrs.append(i)
+            raise AsmError(f"unknown mnemonic {mnem!r} at pc {pc}",
+                           token=mnem)
+        return i
+
+    instrs: list[Instr] = []
+    for pc, ((mnem, ops), guard) in enumerate(zip(lines, guards)):
+        lineno, raw = srcs[pc]
+        try:
+            instrs.append(build(pc, mnem, ops, guard))
+        except AsmError as exc:
+            raise (exc if exc.lineno is not None
+                   else exc.with_context(lineno, raw)) from None
+        except IndexError:
+            raise AsmError(f"missing operand(s) for {mnem}", lineno=lineno,
+                           source=raw) from None
+        except KeyError as exc:
+            raise AsmError(f"bad operand {exc.args[0]!r} for {mnem}",
+                           lineno=lineno, source=raw) from None
 
     return encode_program(instrs)
 
 
+def disassemble_line(row: np.ndarray) -> str:
+    """One instruction row rendered as text, without the pc prefix.
+
+    The form analyzer diagnostics quote (``repro.analysis`` pairs it with
+    the pc); :func:`disassemble` prefixes each line with its pc.
+    """
+    op = Op(int(row[0]))
+    fields = dict(zip(
+        ("op", "dst", "src0", "src1", "src2", "imm", "p1", "p2"),
+        map(int, row)))
+    g = ""
+    if fields["p1"]:
+        k = fields["p1"]
+        g = f"@{'!' if k < 0 else ''}P{abs(k) - 1} "
+    body = " ".join(f"{f}={v}" for f, v in fields.items()
+                    if f not in ("op", "p1") and v)
+    return f"{g}{op.name} {body}".rstrip()
+
+
 def disassemble(table: np.ndarray) -> str:
     """Best-effort inverse of :func:`assemble` (for debugging / logs)."""
-    out = []
-    for pc, row in enumerate(np.asarray(table)):
-        op = Op(int(row[0]))
-        fields = dict(zip(
-            ("op", "dst", "src0", "src1", "src2", "imm", "p1", "p2"),
-            map(int, row)))
-        g = ""
-        if fields["p1"]:
-            k = fields["p1"]
-            g = f"@{'!' if k < 0 else ''}P{abs(k) - 1} "
-        out.append(f"{pc:4d}: {g}{op.name} "
-                   + " ".join(f"{f}={v}" for f, v in fields.items()
-                              if f not in ("op", "p1") and v))
-    return "\n".join(out)
+    return "\n".join(f"{pc:4d}: {disassemble_line(row)}"
+                     for pc, row in enumerate(np.asarray(table)))

@@ -20,6 +20,15 @@ def build_cfg(program: np.ndarray) -> nx.DiGraph:
     L = prog.shape[0]
     g = nx.DiGraph()
     g.add_node(SINK)
+    # RET is an indirect jump through a register, but the calling convention
+    # (programs stage `pc+1` of the CALL into the return register) means it
+    # resolves to some call site's continuation.  Modeling RET as an edge to
+    # every continuation — instead of straight to SINK — keeps the function
+    # body on the path between a call site and its join, so IPDoms
+    # downstream of a call site are the actual reconvergence points rather
+    # than SINK.  With no CALL in the program, RET degrades to an exit.
+    returns = [pc + 1 if pc + 1 < L else SINK
+               for pc in range(L) if int(prog[pc, F_OP]) == Op.CALL]
     for pc in range(L):
         op = int(prog[pc, F_OP])
         predicated = int(prog[pc, F_PRED1]) != 0 or int(prog[pc, F_PRED2]) != 0
@@ -33,9 +42,13 @@ def build_cfg(program: np.ndarray) -> nx.DiGraph:
             if predicated:
                 g.add_edge(pc, nxt)
         elif op == Op.RET:
-            g.add_edge(pc, SINK)
+            for r in (returns or [SINK]):
+                g.add_edge(pc, r)
+            if predicated:
+                g.add_edge(pc, nxt)
         elif op == Op.CALL:
             g.add_edge(pc, int(prog[pc, F_IMM]))
+            g.add_edge(pc, nxt)     # return continuation / predicated skip
         else:
             g.add_edge(pc, nxt)
     return g

@@ -142,22 +142,44 @@ class Simulator:
 
     def __init__(self, mechanism: str = "hanoi", *,
                  sink: TraceSink | None = None,
-                 max_workers: int | None = None) -> None:
+                 max_workers: int | None = None,
+                 verify: "bool | str" = False) -> None:
         self._default = get_mechanism(mechanism).name   # validate eagerly
         self._sink = sink
         self._max_workers = max_workers
+        self._verify = verify
 
     @property
     def mechanism(self) -> str:
         return self._default
 
+    def _check(self, reqs: "Iterable[SimRequest]",
+               verify: "bool | str | None") -> None:
+        """Static pre-admission verification (:mod:`repro.analysis`).
+
+        ``verify=True`` raises
+        :class:`~repro.analysis.StaticAnalysisError` for programs with
+        ``error``-level diagnostics before any engine runs; ``"strict"``
+        also fails on warnings.  Default off: the façade is also the tool
+        used to *study* broken programs (the volta_itps structural-deadlock
+        experiments run them on purpose) — the service flips the default.
+        """
+        verify = self._verify if verify is None else verify
+        if not verify:
+            return
+        from repro.analysis import verify_program   # lazy: keep import light
+        for req in reqs:
+            verify_program(req.program, req.resolved_cfg(), name=req.name,
+                           strict=(verify == "strict"))
+
     # -- single run ---------------------------------------------------------
 
     def run(self, program: ProgramLike, cfg: MachineConfig | None = None, *,
             mechanism: str | None = None, sink: TraceSink | None = None,
-            **request_kw) -> SimResult:
+            verify: "bool | str | None" = None, **request_kw) -> SimResult:
         mech = get_mechanism(mechanism or self._default)
         req = as_request(program, cfg, **request_kw)
+        self._check([req], verify)
         result = mech(req)
         self._feed_sink(sink or self._sink, mech, req, result)
         return result
@@ -167,6 +189,7 @@ class Simulator:
     def run_batch(self, programs: Sequence[ProgramLike],
                   cfg: MachineConfig | None = None, *,
                   mechanism: str | None = None, sink: TraceSink | None = None,
+                  verify: "bool | str | None" = None,
                   **request_kw) -> list[SimResult]:
         """Run many requests under one mechanism, preserving order.
 
@@ -184,6 +207,7 @@ class Simulator:
         reqs = [as_request(p, cfg, **request_kw) for p in programs]
         if not reqs:
             return []
+        self._check(reqs, verify)
         from repro.service.planner import execute_plan   # lazy: no cycle at
         results = execute_plan(mech, reqs,               # package import time
                                max_workers=self._max_workers)

@@ -170,13 +170,18 @@ def replay_payload(req: SimRequest) -> dict[str, Any]:
 def run_meta(mechanism: str, req: SimRequest) -> dict[str, Any]:
     """The canonical begin-event meta for one request.
 
-    Human-readable identification (mechanism, program name, shape) plus the
-    ``replay`` payload that makes the archive round-trippable — the one
-    meta builder the Simulator façade and the simulation service share.
+    Human-readable identification (mechanism, program name, shape), the
+    program's static CFG fingerprint (``cfg_fp`` — what ``python -m
+    repro.archive similar`` ranks on without replaying; see
+    :mod:`repro.analysis.fingerprint`), plus the ``replay`` payload that
+    makes the archive round-trippable — the one meta builder the Simulator
+    façade and the simulation service share.
     """
+    from repro.analysis.fingerprint import fingerprint_meta   # lazy; cached
     return {"mechanism": mechanism, "program": req.name,
             "n_threads": req.resolved_cfg().n_threads,
             "program_len": int(np.asarray(req.program).shape[0]),
+            "cfg_fp": fingerprint_meta(req.program, req.resolved_cfg()),
             "replay": replay_payload(req)}
 
 

@@ -159,7 +159,8 @@ def _sim_main(args) -> None:
         default_mechanism=args.mechanism, archive=archive,
         workers=args.workers, max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
-        procs=args.procs, warm_start=args.warm_start or None)
+        procs=args.procs, warm_start=args.warm_start or None,
+        verify=not args.no_verify)
     try:
         with service as svc:
             if args.sm_warps:
@@ -278,6 +279,10 @@ def main():
                          "admits traffic")
     ap.add_argument("--workers", type=int, default=2,
                     help="[sim] service worker threads")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="[sim] skip static pre-admission analysis "
+                         "(repro.analysis); by default error-level "
+                         "programs are rejected at admission")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="[sim] coalescer size-flush threshold")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,

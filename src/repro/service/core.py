@@ -148,6 +148,7 @@ class ServiceStats:
     submitted: int
     completed: int
     failed: int
+    rejected: int                 # refused at admission by static analysis
     queue_depth: int              # admitted, not yet flushed to dispatch
     inflight: int                 # flushed, not yet resolved
     batches: int                  # flushed groups executed
@@ -279,6 +280,15 @@ class SimulationService:
         cause, signature key — plus the shard id in the process tier) to
         every result — instrumentation for tests and callers;
         architectural fields are never touched.
+    verify:
+        Static pre-admission analysis (:mod:`repro.analysis`, default on):
+        programs with ``error``-level diagnostics are *rejected at
+        admission* — the ticket resolves immediately with a
+        :class:`~repro.analysis.StaticAnalysisError` carrying the full
+        diagnostic report, nothing is dispatched to a shard, and the
+        ``rejected`` stats counter is bumped.  ``"strict"`` also rejects
+        on warnings; ``False`` admits everything (the façade default —
+        use it to study intentionally-broken programs).
     shard_init:
         Optional module-level callable, pickled by reference and invoked
         as ``shard_init(shard)`` inside every spawned shard before it
@@ -293,6 +303,7 @@ class SimulationService:
                  warm_start: str | None = None,
                  archive: TraceSink | None = None,
                  annotate: bool = True,
+                 verify: "bool | str" = True,
                  shard_init=None) -> None:
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -310,6 +321,7 @@ class SimulationService:
         self._archive = archive
         self._archive_lock = threading.Lock()
         self._annotate = annotate
+        self._verify = verify
         self._sim = Simulator(self._default)      # SM cells / shared façade
         self._dispatch: "queue.Queue[Any]" = queue.Queue()
         self._threads: list[threading.Thread] = []
@@ -318,7 +330,8 @@ class SimulationService:
         self._stopping = False
         self._lock = threading.Lock()             # stats + lifecycle
         self._stats = {
-            "submitted": 0, "completed": 0, "failed": 0, "inflight": 0,
+            "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "inflight": 0,
             "batches": 0, "native_batches": 0, "native_warps": 0,
             "sm_jobs": 0, "flush_size": 0, "flush_deadline": 0,
             "flush_manual": 0,
@@ -437,14 +450,43 @@ class SimulationService:
 
     # -- admission ----------------------------------------------------------
 
+    def _admission_error(self, req: SimRequest):
+        """The :class:`~repro.analysis.StaticAnalysisError` for ``req``,
+        or None when it passes (or verification is off)."""
+        if not self._verify:
+            return None
+        from repro.analysis import StaticAnalysisError, verify_program
+        try:
+            verify_program(req.program, req.resolved_cfg(), name=req.name,
+                           strict=(self._verify == "strict"))
+        except StaticAnalysisError as exc:
+            return exc
+        return None
+
+    def _reject(self, ticket: SimTicket, exc: Exception, warps: int) -> None:
+        """Resolve a ticket with a rejection — nothing is dispatched."""
+        with self._lock:
+            self._stats["submitted"] += warps
+            self._stats["rejected"] += warps
+        ticket._future.set_exception(exc)
+
     def submit(self, program: ProgramLike,
                cfg: MachineConfig | None = None, *,
                mechanism: str | None = None, **request_kw) -> SimTicket:
-        """Admit one warp request; returns immediately with a ticket."""
+        """Admit one warp request; returns immediately with a ticket.
+
+        Statically-invalid programs (see the ``verify`` constructor knob)
+        are rejected here: the ticket carries the analysis report as its
+        exception and no shard ever sees the request.
+        """
         mech = get_mechanism(mechanism or self._default)
         req = as_request(program, cfg, **request_kw)
         sig = signature_of(mech, req)
         ticket = SimTicket(sig)
+        exc = self._admission_error(req)
+        if exc is not None:
+            self._reject(ticket, exc, 1)
+            return ticket
         with self._admission_lock:
             self._ensure_started()
             with self._lock:
@@ -477,9 +519,21 @@ class SimulationService:
         (``warps_per_s`` measures SM traffic, not cells); ``sm_jobs`` and
         the latency window record the cell once.
         """
-        from repro.engine.mechanisms.sm import warp_count
+        from repro.engine.mechanisms.sm import per_warp_programs, warp_count
         warps = warp_count(programs, n_warps)
         ticket = SimTicket()
+        if self._verify:
+            try:
+                per_warp = per_warp_programs(programs, n_warps)
+            except ValueError:
+                # programs/n_warps conflict: not a static-analysis matter —
+                # admit and let run_sm fail it per warp, as without verify
+                per_warp = ()
+            for p in per_warp:
+                exc = self._admission_error(as_request(p, cfg, **request_kw))
+                if exc is not None:
+                    self._reject(ticket, exc, max(1, warps))
+                    return ticket
         job = _SmJob(ticket=ticket, programs=programs, cfg=cfg,
                      kwargs=dict(n_warps=n_warps, inner=inner, policy=policy,
                                  timing_cfg=timing_cfg, **request_kw),
@@ -611,7 +665,7 @@ class SimulationService:
         return ServiceStats(
             uptime_s=uptime,
             submitted=s["submitted"], completed=s["completed"],
-            failed=s["failed"],
+            failed=s["failed"], rejected=s["rejected"],
             queue_depth=self._coalescer.depth(),
             inflight=s["inflight"],
             batches=s["batches"], native_batches=s["native_batches"],

@@ -247,3 +247,19 @@ def make_program(seed: int, n_bx: int, *, sync_features: bool = False,
 
 
 CHECK_REGS = [1, 2, 5, 6, 8, 9, 10]
+
+
+def corpus(n_seeds: int = 40, n_bx: int = 8):
+    """Every distribution's programs for ``n_seeds`` seeds, as
+    ``(label, program, cfg)`` triples — the shared walk the static-analysis
+    conformance gate, the analyzer benchmark, and CI smoke all iterate
+    (rejected seeds are skipped, exactly as the property suites skip them).
+    """
+    out = []
+    for tag, kw in (("base", {}), ("sync", {"sync_features": True}),
+                    ("mem", {"mem_features": True})):
+        for seed in range(n_seeds):
+            made, cfg = make_program(seed, n_bx, **kw)
+            if made is not None:
+                out.append((f"{tag}-{seed}", made[0], cfg))
+    return out

@@ -1,0 +1,467 @@
+"""repro.analysis: static verifier, CFG fingerprints, and their wiring.
+
+Four layers under test:
+
+* the full-opcode CFG builder + CALL/RET interprocedural edges (shared
+  regression against ``repro.core.cfg.immediate_postdominators``);
+* the conformance gate — every suite + progen program (all feature
+  distributions) analyzes with zero errors, and each known-bad fixture
+  triggers exactly its intended diagnostic;
+* assembler/analyzer diagnostics — AsmError source line/column context,
+  and ``(pc, disassembled line)`` on every Diagnostic, round-tripped
+  through assemble/disassemble;
+* platform wiring — ``Simulator.run(verify=...)``, service admission
+  rejection (no shard dispatch, ``rejected`` stat), archive fingerprints
+  and ``rank_similar`` / the ``similar`` CLI.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import (FEATURES, ProgramCFG, Severity,
+                            StaticAnalysisError, analyze_program, distance,
+                            fingerprint, fingerprint_meta, verify_program)
+from repro.core import programs as P
+from repro.core.asm import AsmError, assemble, disassemble, disassemble_line
+from repro.core.cfg import immediate_postdominators
+from repro.core.isa import F_OP, MachineConfig, Op
+from repro.core.programs import make_suite
+from tests.progen import corpus
+
+W8 = MachineConfig(n_threads=8)
+
+
+def codes(report):
+    return [d.code for d in report.diagnostics]
+
+
+# ---------------------------------------------------------------------------
+# CFG builder + CALL/RET edge regression (satellite 1)
+# ---------------------------------------------------------------------------
+
+def calls_benchmark():
+    bench = next(b for b in make_suite(W8) if b.name == "CALLS")
+    return bench.program
+
+
+def test_call_site_ipdom_is_callsync_not_sink():
+    # pre-fix, calls had no return edge to pc+1, so everything downstream
+    # of a call site post-dominated nothing and IPDoms collapsed to SINK
+    prog = calls_benchmark()
+    ipdoms = immediate_postdominators(prog)
+    bsync_pcs = [pc for pc in range(prog.shape[0])
+                 if int(prog[pc, F_OP]) == Op.BSYNC]
+    assert ipdoms, "CALLS has conditional branches"
+    for pc, ipdom in ipdoms.items():
+        assert ipdom in bsync_pcs, (
+            f"branch at pc {pc}: IPDom {ipdom} should be a BSYNC "
+            f"(reconvergence downstream of the call site), not SINK")
+
+
+def test_predicated_call_has_fall_through_edge():
+    prog = assemble("""
+        LANEID R1
+        ISETP.GE P0, R1, 2
+        @P0 CALL f
+        EXIT
+    f:
+        MOV R9, 4
+        RET R9
+    """)
+    g = ProgramCFG(prog)
+    assert sorted(g.succs[2]) == [3, 4]      # callee AND fall-through
+    # RET returns to the call continuation, not the virtual sink
+    assert g.succs[5] == [3]
+
+
+def test_branch_ipdoms_match_core_cfg_everywhere():
+    progs = [b.program for b in make_suite(W8)]
+    progs += [prog for _, prog, _ in corpus(20)]
+    for prog in progs:
+        assert ProgramCFG(prog).branch_ipdoms == \
+            immediate_postdominators(prog)
+
+
+def test_bad_control_target_is_redirected_not_fatal():
+    g = ProgramCFG(assemble("BRA 99"))
+    assert g.bad_targets == [0]
+    assert g.succs[0] == [g.sink]
+
+
+# ---------------------------------------------------------------------------
+# conformance gate (satellite 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bench", make_suite(W8), ids=lambda b: b.name)
+def test_suite_program_has_zero_errors(bench):
+    report = analyze_program(bench.program, W8, name=bench.name)
+    assert report.ok, report.render()
+    assert not report.warnings, report.render()
+
+
+def test_progen_corpus_all_distributions_zero_errors():
+    triples = corpus(40)
+    assert len(triples) > 80, "corpus unexpectedly small"
+    for label, prog, cfg in triples:
+        report = analyze_program(prog, cfg, name=label)
+        assert report.ok, report.render()
+
+
+def test_yieldless_spinlock_triggers_exactly_spin_loop_warning():
+    report = analyze_program(P.spinlock_no_yield_program(), W8)
+    assert codes(report) == ["spin-loop"]
+    assert report.diagnostics[0].severity is Severity.WARN
+    # ... and the YIELD-ful original is completely clean
+    assert not analyze_program(P.spinlock_program(), W8).diagnostics
+
+
+def test_fig6_break_is_info_removing_it_is_error():
+    with_break = analyze_program(P.fig6_program(), W8)
+    assert with_break.ok
+    assert set(codes(with_break)) == {"early-reconvergence"}
+    without = analyze_program(P.fig6_no_break_program(), W8)
+    assert not without.ok
+    assert all(c == "reconvergence" for c in codes(without))
+
+
+def test_warpsync_split_rendezvous_is_error():
+    split = assemble("""
+        LANEID R1
+        ISETP.GE P0, R1, 2
+        @P0 BRA x
+        WARPSYNC 15
+        BRA j
+    x:
+        WARPSYNC 15
+    j:
+        EXIT
+    """)
+    report = analyze_program(split, MachineConfig(n_threads=4))
+    assert "warpsync-split" in codes(report)
+    assert not report.ok
+    # single shared rendezvous: legal (only the unannotated-branch info)
+    good = analyze_program(P.warpsync_program(4), MachineConfig(n_threads=4))
+    assert good.ok
+    assert codes(good) == ["unannotated-branch"]
+
+
+def test_bad_target_diagnostic():
+    report = analyze_program(assemble("BRA 99"))
+    assert codes(report) == ["bad-target"]
+    assert not report.ok
+
+
+def test_bssy_target_must_be_matching_bsync():
+    not_bsync = assemble("BSSY B0, 2\nNOP\nNOP\nEXIT")
+    assert "bssy-target" in codes(analyze_program(not_bsync))
+    wrong_bx = assemble("BSSY B0, 2\nNOP\nBSYNC B1\nEXIT")
+    assert "bssy-target" in codes(analyze_program(wrong_bx))
+
+
+def test_bx_out_of_range_is_error():
+    report = analyze_program(assemble("BSYNC B9\nEXIT"),
+                             MachineConfig(n_bx=8))
+    assert "bad-bx" in codes(report)
+
+
+def test_fig5_without_spill_is_bx_clobber():
+    clobbered = FIG5_NO_SPILL = P.FIG5_ASM.replace(
+        "    BMOV R0, B0         ; spill: R0 <- B0  (Fig 5 step 2)", "    NOP")
+    assert "BMOV R0, B0" not in FIG5_NO_SPILL
+    report = analyze_program(assemble(clobbered), W8)
+    assert "bx-clobber" in codes(report)
+    # the real Fig 5 (with the spill) is clean
+    assert analyze_program(P.fig5_program(), W8).ok
+
+
+def test_unreachable_and_fall_off_end_warnings():
+    report = analyze_program(assemble("""
+        BRA done
+        MOV R1, 1
+        MOV R2, 2
+    done:
+        MOV R3, 3
+    """))
+    cs = codes(report)
+    assert "unreachable" in cs and "fall-off-end" in cs
+    assert report.ok          # warnings, not errors
+
+
+def test_infinite_loop_warning():
+    report = analyze_program(assemble("loop:\nMOV R1, 1\nBRA loop"))
+    assert "infinite-loop" in codes(report)
+
+
+def test_verify_program_raises_with_report_attached():
+    with pytest.raises(StaticAnalysisError) as exc_info:
+        verify_program(P.fig6_no_break_program(), W8, name="fig6nb")
+    report = exc_info.value.report
+    assert report.name == "fig6nb"
+    assert not report.ok
+    assert "reconvergence" in str(exc_info.value)
+    # strict promotes warnings to failures
+    verify_program(P.spinlock_no_yield_program(), W8)        # ok: warn only
+    with pytest.raises(StaticAnalysisError):
+        verify_program(P.spinlock_no_yield_program(), W8, strict=True)
+
+
+# ---------------------------------------------------------------------------
+# assembler + diagnostic source context (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_asm_error_carries_line_col_and_caret():
+    src = "    MOV R1, 1\n    BRA nowhere\n    EXIT"
+    with pytest.raises(AsmError) as exc_info:
+        assemble(src)
+    err = exc_info.value
+    assert err.lineno == 2
+    assert err.col == src.splitlines()[1].find("nowhere") + 1
+    assert err.source == "    BRA nowhere"
+    rendered = str(err)
+    assert "line 2" in rendered and "^" in rendered
+
+
+def test_asm_error_missing_operand_names_line():
+    with pytest.raises(AsmError) as exc_info:
+        assemble("MOV R1, 1\nBRA")
+    err = exc_info.value
+    assert err.lineno == 2
+    assert "missing operand" in err.reason
+
+
+def test_asm_error_bad_guard_has_context():
+    with pytest.raises(AsmError) as exc_info:
+        assemble("@Q0 MOV R1, 1")
+    assert exc_info.value.lineno == 1
+    assert "bad predicate" in exc_info.value.reason
+
+
+def test_diagnostics_quote_disassembled_instruction():
+    prog = P.fig6_no_break_program()
+    report = analyze_program(prog, W8)
+    assert report.diagnostics
+    for d in report.diagnostics:
+        assert d.line == disassemble_line(prog[d.pc])
+        assert d.line            # non-empty
+        # the pc-prefixed form appears verbatim in the full disassembly
+        assert f"{d.pc:4d}: {d.line}" in disassemble(prog)
+
+
+def test_disassemble_line_roundtrip_via_disassemble():
+    prog = P.fig5_program()
+    lines = disassemble(prog).splitlines()
+    assert len(lines) == prog.shape[0]
+    for pc, row in enumerate(prog):
+        assert lines[pc] == f"{pc:4d}: {disassemble_line(row)}"
+
+
+def test_lint_cli_reports_pc_and_disasm(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.asm"
+    bad.write_text(P.FIG6_NO_BREAK_ASM)
+    assert main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[error] reconvergence" in out
+    prog = P.fig6_no_break_program()
+    for d in analyze_program(prog, W8).errors:
+        assert f"pc {d.pc:4d}" in out
+        assert disassemble_line(prog[d.pc]) in out
+
+
+def test_lint_cli_json_and_strict(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    spin = tmp_path / "spin.asm"
+    spin.write_text(P.SPINLOCK_NO_YIELD_ASM)
+    assert main([str(spin), "--json"]) == 0          # warn only: passes
+    obj = json.loads(capsys.readouterr().out)
+    assert obj["ok"] and [d["code"] for d in obj["diagnostics"]] == \
+        ["spin-loop"]
+    assert set(obj["fingerprint"]["features"]) == set(FEATURES)
+    assert main([str(spin), "--strict"]) == 1        # strict: warn fails
+    capsys.readouterr()
+
+
+def test_lint_cli_asm_error_exit_2(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    broken = tmp_path / "broken.asm"
+    broken.write_text("BRA nowhere\n")
+    with pytest.raises(SystemExit) as exc_info:
+        main([str(broken)])
+    assert exc_info.value.code == 2
+    assert "line 1" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_shape_and_self_distance():
+    fp = fingerprint(P.spinlock_program())
+    assert len(fp) == len(FEATURES)
+    assert distance(fp, fp) == 0.0
+    other = fingerprint(P.diamond_program())
+    d = distance(fp, other)
+    assert 0.0 < d <= 1.0
+    assert d == distance(other, fp)          # symmetric
+
+
+def test_fingerprint_meta_roundtrips_through_json():
+    meta = fingerprint_meta(P.fig5_program())
+    back = json.loads(json.dumps(meta))
+    assert tuple(back["f"]) == fingerprint(P.fig5_program())
+
+
+def test_fingerprint_distinguishes_structures():
+    # a loopy atomic program sits far from a straight-line diamond; the
+    # same program re-encoded is at 0
+    spin = fingerprint(P.spinlock_program())
+    spin2 = fingerprint(assemble(P.SPINLOCK_ASM))
+    assert distance(spin, spin2) == 0.0
+    assert distance(spin, fingerprint(P.diamond_program())) > 0.1
+
+
+# ---------------------------------------------------------------------------
+# platform wiring: Simulator verify / service admission / archive similar
+# ---------------------------------------------------------------------------
+
+def test_simulator_verify_flag():
+    from repro.engine import Simulator
+    sim = Simulator("hanoi")
+    bad = P.fig6_no_break_program()
+    # default: permissive — broken programs are runnable on purpose
+    res = sim.run(bad, W8)
+    assert res is not None
+    with pytest.raises(StaticAnalysisError):
+        sim.run(bad, W8, verify=True)
+    with pytest.raises(StaticAnalysisError):
+        sim.run_batch([P.diamond_program(), bad], W8, verify=True)
+    # constructor default applies when the call site doesn't override
+    strict_sim = Simulator("hanoi", verify=True)
+    with pytest.raises(StaticAnalysisError):
+        strict_sim.run(bad, W8)
+    # explicit verify=False bypasses the constructor default — the broken
+    # program runs (and, being broken, exhausts its fuel instead of exiting)
+    assert strict_sim.run(bad, W8, verify=False).status is not None
+
+
+def test_service_rejects_statically_invalid_at_admission():
+    from repro.service import SimulationService
+    bad = P.fig6_no_break_program()
+    good = P.fig6_program()
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        t_bad = svc.submit(bad, W8, name="bad")
+        t_good = svc.submit(good, W8, name="good")
+        svc.flush()
+        assert t_good.result(30).ok
+        exc = t_bad.exception(5)
+        assert isinstance(exc, StaticAnalysisError)
+        assert [d.code for d in exc.report.errors] == \
+            ["reconvergence", "reconvergence"]
+        stats = svc.stats()
+    assert stats.rejected == 1
+    assert stats.submitted == 2
+    assert stats.completed == 1          # the rejected one never dispatched
+    assert stats.failed == 0
+
+
+def test_service_rejects_bad_sm_cell():
+    from repro.service import SimulationService
+    with SimulationService(default_mechanism="hanoi", workers=1) as svc:
+        t = svc.submit_sm(P.fig6_no_break_program(), W8, n_warps=2,
+                          inner="hanoi")
+        assert isinstance(t.exception(5), StaticAnalysisError)
+        stats = svc.stats()
+    assert stats.rejected == 2           # counted in warps, like submitted
+    assert stats.sm_jobs == 0
+
+
+def test_service_verify_off_admits_everything():
+    from repro.service import SimulationService
+    with SimulationService(default_mechanism="hanoi", workers=1,
+                           verify=False) as svc:
+        t = svc.submit(P.fig6_no_break_program(), W8)
+        svc.flush()
+        res = t.result(30)               # runs (and deadlocks) for real
+        assert res is not None
+        assert svc.stats().rejected == 0
+
+
+def _write_archive(tmp_path):
+    from repro.engine import Simulator
+    from repro.engine.sinks import RotatingJsonlSink
+    d = str(tmp_path / "arch")
+    sink = RotatingJsonlSink(d)
+    sim = Simulator("hanoi", sink=sink)
+    for name, prog in [("spin", P.spinlock_program()),
+                       ("fig5", P.fig5_program()),
+                       ("fig6", P.fig6_program()),
+                       ("diamond", P.diamond_program())]:
+        sim.run(prog, W8, name=name, record_trace=True)
+    sink.flush()
+    sink.close()
+    return d
+
+
+def test_archive_index_carries_fingerprints(tmp_path):
+    from repro.archive import ArchiveIndex
+    d = _write_archive(tmp_path)
+    idx = ArchiveIndex.ensure(d)
+    assert len(idx) == 4
+    for e in idx.entries:
+        assert e.fp is not None and len(e.fp) == len(FEATURES)
+    # stamped fp == recomputed fp (the begin-meta stamp is authoritative)
+    assert idx.entries[0].fp == fingerprint(P.spinlock_program())
+
+
+def test_rank_similar_self_match_first_at_zero(tmp_path):
+    from repro.archive import ArchiveIndex
+    d = _write_archive(tmp_path)
+    idx = ArchiveIndex.ensure(d)
+    for e in idx.entries:
+        ranked = idx.rank_similar(e.fp)
+        assert ranked[0] == (e.run_id, 0.0)
+        assert len(ranked) == len(idx)
+        assert all(ranked[i][1] <= ranked[i + 1][1]
+                   for i in range(len(ranked) - 1))
+
+
+def test_similar_cli_by_run_id_and_asm(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    d = _write_archive(tmp_path)
+    assert main(["similar", d, "--to", "run-000001", "--top", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "run-000001  d=0.0000" in out
+    # query by .asm file: the archived spinlock run is its 0-distance match
+    q = tmp_path / "q.asm"
+    q.write_text(P.SPINLOCK_ASM)
+    assert main(["similar", d, "--to", str(q), "--json"]) == 0
+    obj = json.loads(capsys.readouterr().out)
+    assert obj["ranked"][0] == {"id": "run-000000", "distance": 0.0}
+
+
+def test_similar_cli_unknown_run_id(tmp_path, capsys):
+    from repro.archive.__main__ import main
+    d = _write_archive(tmp_path)
+    assert main(["similar", d, "--to", "run-999999"]) == 1
+    assert "unknown run id" in capsys.readouterr().err
+
+
+def test_old_sidecar_version_transparently_rebuilt(tmp_path):
+    from repro.archive import ArchiveIndex
+    from repro.archive.index import INDEX_KIND, index_path
+    d = _write_archive(tmp_path)
+    idx = ArchiveIndex.ensure(d)
+    # forge a v1 sidecar (pre-fingerprint): load() must refuse it and
+    # ensure() must rebuild with fingerprints filled in
+    header = {"kind": INDEX_KIND, "version": 1, "prefix": "traces",
+              "files": [list(f) for f in idx.files], "runs": len(idx)}
+    with open(index_path(d), "w", encoding="utf-8") as fh:
+        fh.write(json.dumps(header) + "\n")
+        for e in idx.entries:
+            row = e.to_json()
+            del row["fp"]
+            fh.write(json.dumps(row) + "\n")
+    assert ArchiveIndex.load(d) is None
+    rebuilt = ArchiveIndex.ensure(d)
+    assert all(e.fp is not None for e in rebuilt.entries)
