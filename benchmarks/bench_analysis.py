@@ -1,6 +1,6 @@
-"""Static-analysis benchmarks: analyzer throughput + sidecar similarity.
+"""Static-analysis benchmarks: analyzer + synthesizer + similarity.
 
-Two sections:
+Three sections:
 
 * **analyzer** — cold-cache ``analyze_program`` over the full benchmark
   suite plus every ``tests/progen.py`` distribution (the same corpus the
@@ -8,6 +8,12 @@ Two sections:
   (ISSUE 9) asserts >= 1k programs/s *with caches cleared* — static
   admission must be invisible next to simulation cost, and the service
   runs it on every submit.
+* **synthesizer** — cold-cache ``strip_annotations`` →
+  ``synthesize_annotations`` round-trips over the same corpus, gating
+  both throughput (>= 500 programs/s: repair-at-admission must stay
+  cheap) and correctness (every round-trip bit-equal to the compiler's
+  own annotation — the known FIG5 deviation excepted — and error-free
+  under re-analysis).
 * **similarity** — "find archived runs whose control flow resembles this
   program", both ways: ranking CFG fingerprints straight from the sidecar
   index (``ArchiveIndex.rank_similar``, nothing replayed, no archive file
@@ -40,7 +46,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from tests.progen import corpus  # noqa: E402  (repo-root import, like tests)
 
 GATE_PROGRAMS_PER_S = 1000.0     # acceptance: cold analyzer throughput
+GATE_SYNTH_PROGRAMS_PER_S = 500.0   # acceptance: strip+synthesize round-trip
 GATE_SIM_SPEEDUP = 100.0         # acceptance: sidecar rank vs replay+diff
+
+# round-trips that are equivalent but deliberately not bit-equal: FIG5
+# hand-forces B0 reuse + an R0 spill the allocator improves away
+KNOWN_DEVIATIONS = {"FIG5"}
 
 
 def _clear_caches() -> None:
@@ -81,6 +92,67 @@ def bench_analyzer(n_seeds: int, *, repeats: int = 3) -> None:
         analyze_program(p, c, name=name)
     t_warm = time.perf_counter() - t0
     print(f"warm (cached): {len(progs) / max(t_warm, 1e-9):.0f} progs/s")
+
+
+def bench_synthesizer(n_seeds: int, *, repeats: int = 3) -> None:
+    """Strip → synthesize over suite + every progen distribution.
+
+    Throughput gate (>= 500 programs/s cold) plus the round-trip
+    equivalence gate: every resynthesized program must be bit-equal to
+    the structured compiler's annotation (KNOWN_DEVIATIONS excepted) and
+    re-analyze with zero errors — the same contract the service's
+    ``auto_annotate`` admission repair leans on.
+    """
+    import numpy as np
+
+    from repro.analysis import (strip_annotations, synthesize_annotations,
+                                verify_program)
+
+    cfg = MachineConfig(n_threads=8)
+    progs = [(b.name, b.program, cfg) for b in make_suite(cfg)]
+    progs += corpus(n_seeds)
+    print(f"\n== synthesizer: cold strip+synthesize round-trip over "
+          f"{len(progs)} programs (suite + progen x{n_seeds} seeds) ==")
+    best = float("inf")
+    for _ in range(repeats):
+        _clear_caches()
+        t0 = time.perf_counter()
+        results = [(name, p, c,
+                    synthesize_annotations(strip_annotations(p, c).program,
+                                           c))
+                   for name, p, c in progs]
+        best = min(best, time.perf_counter() - t0)
+    rate = len(progs) / max(best, 1e-9)
+    n_regions = sum(r.regions for _, _, _, r in results)
+    n_yields = sum(r.yields for _, _, _, r in results)
+    deviations = [name for name, p, c, r in results
+                  if not np.array_equal(r.program, np.asarray(p))]
+    for name, p, c, r in results:
+        assert not verify_program(r.program, c).errors, name
+    print(f"{'programs':>9} {'wall_s':>9} {'progs/s':>10} "
+          f"{'regions':>8} {'yields':>7}")
+    print(f"{len(progs):>9} {best:>9.3f} {rate:>10.0f} "
+          f"{n_regions:>8} {n_yields:>7}")
+    unexpected = [n for n in deviations
+                  if n.split(":")[-1] not in KNOWN_DEVIATIONS]
+    assert not unexpected, (
+        f"acceptance gate: round-trip must be bit-equal outside "
+        f"{sorted(KNOWN_DEVIATIONS)}; deviated: {unexpected}")
+    # bit-equal programs are trivially trace-equivalent; the known
+    # deviations must still prove it by execution (memory + status)
+    sim = Simulator("hanoi")
+    for name, p, c, r in results:
+        if name not in deviations:
+            continue
+        ra = sim.run(p, c)
+        rb = sim.run(r.program, c)
+        assert ra.status == rb.status and np.array_equal(ra.mem, rb.mem), (
+            f"{name}: deviating round-trip is not execution-equivalent")
+    assert rate >= GATE_SYNTH_PROGRAMS_PER_S, (
+        f"acceptance gate: cold strip+synthesize must sustain "
+        f">={GATE_SYNTH_PROGRAMS_PER_S:.0f} programs/s; measured {rate:.0f}")
+    print(f"gate OK: >= {GATE_SYNTH_PROGRAMS_PER_S:.0f} programs/s cold "
+          f"({rate:.0f}/s), bit-equal outside {sorted(KNOWN_DEVIATIONS)}")
 
 
 def bench_similarity(n_runs: int) -> None:
@@ -146,9 +218,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         bench_analyzer(n_seeds=40, repeats=1)
+        bench_synthesizer(n_seeds=40, repeats=2)
         bench_similarity(n_runs=120)
     else:
         bench_analyzer(n_seeds=120)
+        bench_synthesizer(n_seeds=120)
         bench_similarity(n_runs=200)
 
 

@@ -14,17 +14,32 @@ begin-event meta and the sidecar index; ``python -m repro.archive similar``
 ranks archived runs by :func:`fingerprint.distance` without replaying.
 ``python -m repro.analysis`` is the standalone lint CLI.
 
-See docs/analysis.md for the diagnostic catalog and fingerprint format.
+The package also *produces* annotations, not just checks them:
+:func:`synthesize_annotations` plants BSSY/BSYNC regions, allocates Bx
+registers (spilling via BMOV when nesting exceeds the file), and inserts
+YIELD into spin-loops; :func:`strip_annotations` is its inverse, and
+:func:`estimate` prices a program statically against the
+:mod:`repro.timing` latencies.  ``python -m repro.analysis --fix``,
+``Simulator.run(..., synthesize=True)`` and ``serve --auto-annotate``
+expose the synthesis pipeline through the platform.
+
+See docs/analysis.md for the diagnostic catalog, the synthesis passes,
+and the fingerprint format.
 """
 from .cfg import SINK, Loop, ProgramCFG
+from .cost import CostEstimate, estimate, rank_correlation
 from .fingerprint import (FEATURES, FP_VERSION, distance, fingerprint,
                           fingerprint_meta, rank)
 from .passes import (AnalysisReport, Diagnostic, Severity,
                      StaticAnalysisError, analyze_program, verify_program)
+from .transform import (StripResult, SynthesisResult, TransformError,
+                        strip_annotations, synthesize_annotations)
 
 __all__ = [
-    "AnalysisReport", "Diagnostic", "FEATURES", "FP_VERSION", "Loop",
-    "ProgramCFG", "SINK", "Severity", "StaticAnalysisError",
-    "analyze_program", "distance", "fingerprint", "fingerprint_meta",
-    "rank", "verify_program",
+    "AnalysisReport", "CostEstimate", "Diagnostic", "FEATURES",
+    "FP_VERSION", "Loop", "ProgramCFG", "SINK", "Severity",
+    "StaticAnalysisError", "StripResult", "SynthesisResult",
+    "TransformError", "analyze_program", "distance", "estimate",
+    "fingerprint", "fingerprint_meta", "rank", "rank_correlation",
+    "strip_annotations", "synthesize_annotations", "verify_program",
 ]

@@ -5,8 +5,15 @@ with its line/column context) and/or walks the built-in benchmark suite,
 runs the static verifier, and prints every diagnostic as
 ``pc NNNN  [severity] code: message`` over the disassembled instruction.
 
+``--fix`` runs the annotation synthesizer first (region synthesis, Bx
+allocation + BMOV spilling, YIELD insertion) and lints the *rewritten*
+program; ``--select``/``--ignore`` narrow the diagnostics that count,
+and ``--format=github`` emits GitHub Actions workflow annotations so CI
+can gate on a chosen subset.
+
 Exit status: 0 clean, 1 when any program has errors (or, with
-``--strict``, warnings), 2 when an input fails to assemble.
+``--strict``, warnings), 2 when an input fails to assemble or ``--fix``
+cannot rewrite it.
 """
 from __future__ import annotations
 
@@ -19,7 +26,11 @@ from repro.core.asm import AsmError, assemble
 from repro.core.isa import MachineConfig
 
 from .fingerprint import FEATURES, FP_VERSION, fingerprint
-from .passes import analyze_program
+from .passes import AnalysisReport, Severity, analyze_program
+from .transform import TransformError, synthesize_annotations
+
+_GITHUB_LEVEL = {Severity.ERROR: "error", Severity.WARN: "warning",
+                 Severity.INFO: "notice"}
 
 
 def _programs(ns) -> "list[tuple[str, object]]":
@@ -38,6 +49,39 @@ def _programs(ns) -> "list[tuple[str, object]]":
     return progs
 
 
+def _code_set(spec: "str | None") -> "frozenset[str] | None":
+    if spec is None:
+        return None
+    codes = frozenset(c.strip() for c in spec.split(",") if c.strip())
+    return codes or None
+
+
+def _filter(report: AnalysisReport, select, ignore) -> AnalysisReport:
+    """Narrow a report to the diagnostics the caller cares about."""
+    diags = report.diagnostics
+    if select is not None:
+        diags = tuple(d for d in diags if d.code in select)
+    if ignore is not None:
+        diags = tuple(d for d in diags if d.code not in ignore)
+    if diags is report.diagnostics:
+        return report
+    return AnalysisReport(diags, report.fingerprint, report.name)
+
+
+def _github_lines(name: str, report: AnalysisReport) -> "list[str]":
+    # GitHub annotation syntax: properties are comma-separated, the
+    # message follows '::'.  .asm inputs map pc -> 1-based line; suite
+    # programs have no file, so the program name rides in the title.
+    is_file = not name.startswith("suite:")
+    out = []
+    for d in report.diagnostics:
+        props = f"file={name}," if is_file else ""
+        props += f"line={d.pc + 1},title={d.code}"
+        msg = d.message if is_file else f"[{name}] {d.message}"
+        out.append(f"::{_GITHUB_LEVEL[d.severity]} {props}::{msg}")
+    return out
+
+
 def main(argv: "list[str] | None" = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -49,6 +93,15 @@ def main(argv: "list[str] | None" = None) -> int:
                     help="warp width for --suite programs (default 32)")
     ap.add_argument("--strict", action="store_true",
                     help="treat warnings as failures")
+    ap.add_argument("--fix", action="store_true",
+                    help="synthesize missing BSSY/BSYNC/BMOV/YIELD "
+                         "annotations before linting")
+    ap.add_argument("--select", metavar="CODE[,CODE]",
+                    help="only count/show these diagnostic codes")
+    ap.add_argument("--ignore", metavar="CODE[,CODE]",
+                    help="drop these diagnostic codes")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="output style (github = workflow annotations)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit one JSON object per program")
     ap.add_argument("--fingerprint", action="store_true",
@@ -56,11 +109,22 @@ def main(argv: "list[str] | None" = None) -> int:
     ns = ap.parse_args(argv)
     if not ns.files and not ns.suite:
         ap.error("nothing to lint: pass .asm files and/or --suite")
+    select, ignore = _code_set(ns.select), _code_set(ns.ignore)
 
     progs = _programs(ns)
     failed = False
     for name, prog in progs:
-        report = analyze_program(prog, name=name)
+        if ns.fix:
+            try:
+                syn = synthesize_annotations(prog, name=name)
+            except TransformError as exc:
+                print(f"{name}: --fix failed\n{exc}", file=sys.stderr)
+                raise SystemExit(2)
+            prog = syn.program
+            if syn.changed and ns.format == "text" and not ns.as_json:
+                print(f"{name}: synthesized {syn.regions} region(s), "
+                      f"{syn.spills} spill(s), {syn.yields} yield(s)")
+        report = _filter(analyze_program(prog, name=name), select, ignore)
         bad = report.errors + (report.warnings if ns.strict else ())
         failed = failed or bool(bad)
         if ns.as_json:
@@ -75,6 +139,10 @@ def main(argv: "list[str] | None" = None) -> int:
                                 "features": dict(zip(FEATURES,
                                                      report.fingerprint))},
             }))
+            continue
+        if ns.format == "github":
+            for line in _github_lines(name, report):
+                print(line)
             continue
         print(report.render())
         if ns.fingerprint:

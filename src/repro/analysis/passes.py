@@ -117,7 +117,7 @@ def analyze_program(program: np.ndarray, cfg: MachineConfig | None = None,
     prog = np.ascontiguousarray(np.asarray(program, dtype=np.int32))
     cfg = cfg if cfg is not None else MachineConfig()
     report = _analyze_cached(prog.tobytes(), prog.shape[0],
-                             cfg.n_bx, cfg.n_preds)
+                             cfg.n_bx, cfg.n_preds, cfg.n_regs)
     if name:
         report = AnalysisReport(report.diagnostics, report.fingerprint, name)
     return report
@@ -136,9 +136,12 @@ def verify_program(program: np.ndarray, cfg: MachineConfig | None = None,
 
 @lru_cache(maxsize=4096)
 def _analyze_cached(key: bytes, length: int, n_bx: int,
-                    n_preds: int) -> AnalysisReport:
+                    n_preds: int, n_regs: int) -> AnalysisReport:
+    # the key carries every MachineConfig knob a pass reads (n_bx for
+    # stack-depth/bad-bx, n_preds for predicate checks, n_regs for the
+    # spill-capacity hint) so reports never go stale across configs
     prog = np.frombuffer(key, dtype=np.int32).reshape(length, -1)
-    cfg = MachineConfig(n_bx=n_bx, n_preds=n_preds)
+    cfg = MachineConfig(n_bx=n_bx, n_preds=n_preds, n_regs=n_regs)
     return _analyze(prog, cfg)
 
 
@@ -346,5 +349,6 @@ def _check_stack_depth(g: ProgramCFG, cfg: MachineConfig, emit) -> None:
     if depth > cfg.n_bx:
         emit(Severity.WARN, "stack-depth", 0,
              f"static divergence-region nesting reaches {depth} but the "
-             f"machine has n_bx={cfg.n_bx} barrier registers; deeper "
-             f"levels must spill via BMOV")
+             f"machine has n_bx={cfg.n_bx} barrier registers; "
+             f"{depth - cfg.n_bx} level(s) must spill via BMOV "
+             f"({cfg.n_regs} general registers available for slots)")

@@ -25,10 +25,16 @@ import re
 
 import numpy as np
 
-from .isa import CMP_NAMES, Instr, Op, encode_program
+from .isa import CMP_NAMES, N_FIELDS, F_IMM, F_OP, Instr, Op, encode_program
 
 _LABEL_RE = re.compile(r"^([A-Za-z_][\w.]*):$")
 _MEM_RE = re.compile(r"^\[R(\d+)(?:\s*\+\s*(-?\w+))?\]$")
+
+#: Ops whose ``imm`` field is a code address (an edge or reconvergence
+#: target).  MOV is deliberately absent: its imm *can* stage a return
+#: address for RET (see programs.CALLS), which is why the transform passes
+#: refuse to edit CALL/RET-bearing programs instead of guessing.
+TARGET_OPS = frozenset({int(Op.BRA), int(Op.CALL), int(Op.BSSY)})
 
 
 class AsmError(ValueError):
@@ -270,3 +276,117 @@ def disassemble(table: np.ndarray) -> str:
     """Best-effort inverse of :func:`assemble` (for debugging / logs)."""
     return "\n".join(f"{pc:4d}: {disassemble_line(row)}"
                      for pc, row in enumerate(np.asarray(table)))
+
+
+class EditInstr:
+    """One instruction under edit: raw fields plus a symbolic target.
+
+    ``fields`` is the 8-wide isa.py row as a mutable list.  ``target`` is
+    the :class:`EditInstr` this instruction's code-address immediate refers
+    to (BRA/CALL/BSSY), a raw ``int`` kept verbatim when the encoded target
+    was out of range, or ``None`` for ops without a code-address imm.
+    Identity is object identity — two nodes with equal fields are distinct
+    instructions, so list/dict membership follows the program, not values.
+    """
+
+    __slots__ = ("fields", "target")
+
+    def __init__(self, fields: "list[int] | tuple[int, ...]",
+                 target: "EditInstr | int | None" = None) -> None:
+        if len(fields) != N_FIELDS:
+            raise ValueError(f"expected {N_FIELDS} fields, got {len(fields)}")
+        self.fields = [int(x) for x in fields]
+        self.target = target
+
+    @property
+    def op(self) -> int:
+        return self.fields[F_OP]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<EditInstr {disassemble_line(np.asarray(self.fields))}>"
+
+
+class ProgramEditor:
+    """Symbolic insert/remove over a program table with target re-resolution.
+
+    Decoding turns every code-address immediate into a node reference, so
+    instructions can be inserted or removed anywhere and :meth:`encode`
+    re-assigns pcs and re-resolves every BRA/BSSY/CALL immediate — the
+    re-assembly substrate under ``repro.analysis.transform``.
+
+    Insertion is deliberately explicit about edge capture: inserting before
+    a node does NOT redirect branches to that node unless they are listed in
+    ``capture``.  Whether a jump to a loop header should land on a newly
+    synthesized BSSY (yes, for an If opening a loop body) or stay on the old
+    first instruction (yes, for a region's interior back-edge) is a *policy*
+    decision that belongs to the pass, not the editor.
+    """
+
+    def __init__(self, program: np.ndarray) -> None:
+        table = np.asarray(program, dtype=np.int32)
+        if table.ndim != 2 or table.shape[1] != N_FIELDS:
+            raise ValueError(f"program must be [L, {N_FIELDS}], got {table.shape}")
+        self.nodes: "list[EditInstr]" = [EditInstr(row) for row in table.tolist()]
+        n = len(self.nodes)
+        for node in self.nodes:
+            if node.fields[F_OP] in TARGET_OPS:
+                t = node.fields[F_IMM]
+                node.target = self.nodes[t] if 0 <= t < n else t
+
+    def index(self, node: EditInstr) -> int:
+        """Current position of ``node`` (identity match)."""
+        for i, x in enumerate(self.nodes):
+            if x is node:
+                return i
+        raise ValueError("node is not in this editor")
+
+    def refs_to(self, node: EditInstr) -> "list[EditInstr]":
+        """All nodes whose target is ``node``."""
+        return [x for x in self.nodes if x.target is node]
+
+    def insert_before(self, at: EditInstr, node: EditInstr, *,
+                      capture: "tuple[EditInstr, ...] | list[EditInstr]" = ()
+                      ) -> None:
+        """Insert ``node`` immediately before ``at``.
+
+        Referrers listed in ``capture`` are retargeted to the new node;
+        every other reference to ``at`` keeps pointing at ``at``.
+        """
+        i = self.index(at)
+        for ref in capture:
+            ref.target = node
+        self.nodes.insert(i, node)
+
+    def remove(self, node: EditInstr) -> None:
+        """Remove ``node``; references to it fall through to its successor.
+
+        Removing the last instruction leaves referrers pointing one past the
+        end (encoded as a raw out-of-range target) — the analyzer will flag
+        it, which is the honest outcome of that edit.
+        """
+        i = self.index(node)
+        del self.nodes[i]
+        succ: "EditInstr | int" = (self.nodes[i] if i < len(self.nodes)
+                                   else len(self.nodes))
+        for ref in self.nodes:
+            if ref.target is node:
+                ref.target = succ
+
+    def positions(self) -> "dict[EditInstr, int]":
+        """Node -> current pc (nodes hash by identity)."""
+        return {node: pc for pc, node in enumerate(self.nodes)}
+
+    def encode(self) -> np.ndarray:
+        """Re-assemble into an ``int32[L, 8]`` table, resolving targets."""
+        if not self.nodes:
+            raise ValueError("cannot encode an empty program")
+        pcs = self.positions()
+        rows = []
+        for node in self.nodes:
+            f = list(node.fields)
+            if node.target is not None:
+                f[F_IMM] = (pcs[node.target]
+                            if isinstance(node.target, EditInstr)
+                            else int(node.target))
+            rows.append(f)
+        return np.array(rows, dtype=np.int32)

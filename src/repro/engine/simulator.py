@@ -172,13 +172,38 @@ class Simulator:
             verify_program(req.program, req.resolved_cfg(), name=req.name,
                            strict=(verify == "strict"))
 
+    @staticmethod
+    def _synthesize(reqs: "list[SimRequest]") -> "list[SimRequest]":
+        """Rewrite each request's program through the annotation
+        synthesizer (:func:`repro.analysis.synthesize_annotations`):
+        BSSY/BSYNC regions for unannotated divergent branches, BMOV
+        spills past the Bx file, YIELD in spin-loops.
+
+        Raises :class:`repro.analysis.TransformError` when a program
+        cannot be safely rewritten (CALL/RET-crossing regions,
+        unstructured joins).  Note ``bsync_skip_pcs`` is *not* remapped —
+        a request combining ``synthesize=True`` with oracle skip-pcs
+        would point at stale pcs, so pick one or the other.
+        """
+        from repro.analysis import synthesize_annotations  # lazy: light path
+        out = []
+        for req in reqs:
+            syn = synthesize_annotations(req.program, req.resolved_cfg(),
+                                         name=req.name)
+            out.append(dataclasses.replace(req, program=syn.program)
+                       if syn.changed else req)
+        return out
+
     # -- single run ---------------------------------------------------------
 
     def run(self, program: ProgramLike, cfg: MachineConfig | None = None, *,
             mechanism: str | None = None, sink: TraceSink | None = None,
-            verify: "bool | str | None" = None, **request_kw) -> SimResult:
+            verify: "bool | str | None" = None, synthesize: bool = False,
+            **request_kw) -> SimResult:
         mech = get_mechanism(mechanism or self._default)
         req = as_request(program, cfg, **request_kw)
+        if synthesize:
+            [req] = self._synthesize([req])
         self._check([req], verify)
         result = mech(req)
         self._feed_sink(sink or self._sink, mech, req, result)
@@ -190,6 +215,7 @@ class Simulator:
                   cfg: MachineConfig | None = None, *,
                   mechanism: str | None = None, sink: TraceSink | None = None,
                   verify: "bool | str | None" = None,
+                  synthesize: bool = False,
                   **request_kw) -> list[SimResult]:
         """Run many requests under one mechanism, preserving order.
 
@@ -207,6 +233,8 @@ class Simulator:
         reqs = [as_request(p, cfg, **request_kw) for p in programs]
         if not reqs:
             return []
+        if synthesize:
+            reqs = self._synthesize(reqs)
         self._check(reqs, verify)
         from repro.service.planner import execute_plan   # lazy: no cycle at
         results = execute_plan(mech, reqs,               # package import time

@@ -155,12 +155,17 @@ def _sim_main(args) -> None:
                          + ", ".join(b.name for b in suite))
     archive = (RotatingJsonlSink(args.archive_dir)
                if args.archive_dir else None)
+    # --auto-annotate implies strict admission: spin-loop (the repairable
+    # hazard) is warn-level, so repair only ever triggers under strict
+    verify: "bool | str" = not args.no_verify
+    if args.auto_annotate and verify:
+        verify = "strict"
     service = SimulationService(
         default_mechanism=args.mechanism, archive=archive,
         workers=args.workers, max_batch=args.max_batch,
         max_wait_s=args.max_wait_ms / 1000.0,
         procs=args.procs, warm_start=args.warm_start or None,
-        verify=not args.no_verify)
+        verify=verify, auto_annotate=args.auto_annotate)
     try:
         with service as svc:
             if args.sm_warps:
@@ -198,7 +203,8 @@ def _sim_main(args) -> None:
     mix_label = "+".join(mix)
     print(f"[serve:sim] {args.batch} x {args.bench} via {mix_label}: "
           f"{n_ok} ok / {len(results) - n_ok} failed in {dt:.3f}s "
-          f"({len(results) / max(dt, 1e-9):.0f} warps/s)")
+          f"({len(results) / max(dt, 1e-9):.0f} warps/s)"
+          + (f" repaired={stats.repaired}" if stats.repaired else ""))
     print(f"[serve:sim] batches={stats.batches} "
           f"native={stats.native_batches} ({stats.native_warps} warps) "
           f"fill={stats.mean_fill:.1f} "
@@ -283,6 +289,11 @@ def main():
                     help="[sim] skip static pre-admission analysis "
                          "(repro.analysis); by default error-level "
                          "programs are rejected at admission")
+    ap.add_argument("--auto-annotate", action="store_true",
+                    help="[sim] repair rejected programs through the "
+                         "annotation synthesizer (BSSY/BSYNC/BMOV/YIELD) "
+                         "and admit the rewrite instead of rejecting; "
+                         "implies strict admission unless --no-verify")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="[sim] coalescer size-flush threshold")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,

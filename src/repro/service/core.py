@@ -149,6 +149,7 @@ class ServiceStats:
     completed: int
     failed: int
     rejected: int                 # refused at admission by static analysis
+    repaired: int                 # auto-annotate rewrites admitted (warps)
     queue_depth: int              # admitted, not yet flushed to dispatch
     inflight: int                 # flushed, not yet resolved
     batches: int                  # flushed groups executed
@@ -304,6 +305,7 @@ class SimulationService:
                  archive: TraceSink | None = None,
                  annotate: bool = True,
                  verify: "bool | str" = True,
+                 auto_annotate: bool = False,
                  shard_init=None) -> None:
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
@@ -322,6 +324,7 @@ class SimulationService:
         self._archive_lock = threading.Lock()
         self._annotate = annotate
         self._verify = verify
+        self._auto_annotate = auto_annotate
         self._sim = Simulator(self._default)      # SM cells / shared façade
         self._dispatch: "queue.Queue[Any]" = queue.Queue()
         self._threads: list[threading.Thread] = []
@@ -331,7 +334,7 @@ class SimulationService:
         self._lock = threading.Lock()             # stats + lifecycle
         self._stats = {
             "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
-            "inflight": 0,
+            "repaired": 0, "inflight": 0,
             "batches": 0, "native_batches": 0, "native_warps": 0,
             "sm_jobs": 0, "flush_size": 0, "flush_deadline": 0,
             "flush_manual": 0,
@@ -463,6 +466,25 @@ class SimulationService:
             return exc
         return None
 
+    def _repair(self, req: SimRequest) -> "SimRequest | None":
+        """``auto_annotate`` path: a synthesized copy of ``req`` that
+        passes admission, or None when the synthesizer refuses
+        (CALL/RET-crossing regions), changes nothing, or the rewrite
+        still fails verification (e.g. ``reconvergence`` errors the
+        synthesizer cannot undo)."""
+        from repro.analysis import TransformError, synthesize_annotations
+        try:
+            syn = synthesize_annotations(req.program, req.resolved_cfg(),
+                                         name=req.name)
+        except TransformError:
+            return None
+        if not syn.changed:
+            return None
+        fixed = dataclasses.replace(req, program=syn.program)
+        if self._admission_error(fixed) is not None:
+            return None
+        return fixed
+
     def _reject(self, ticket: SimTicket, exc: Exception, warps: int) -> None:
         """Resolve a ticket with a rejection — nothing is dispatched."""
         with self._lock:
@@ -477,13 +499,23 @@ class SimulationService:
 
         Statically-invalid programs (see the ``verify`` constructor knob)
         are rejected here: the ticket carries the analysis report as its
-        exception and no shard ever sees the request.
+        exception and no shard ever sees the request.  With
+        ``auto_annotate=True`` a rejection is first routed through the
+        annotation synthesizer — repaired programs are admitted (and
+        counted in ``ServiceStats.repaired``); only programs the
+        synthesizer cannot fix are rejected.
         """
         mech = get_mechanism(mechanism or self._default)
         req = as_request(program, cfg, **request_kw)
+        exc = self._admission_error(req)
+        repaired = False
+        if exc is not None and self._auto_annotate:
+            fixed = self._repair(req)
+            if fixed is not None:
+                req, exc, repaired = fixed, None, True
+        # signature after repair: the admitted program is what coalesces
         sig = signature_of(mech, req)
         ticket = SimTicket(sig)
-        exc = self._admission_error(req)
         if exc is not None:
             self._reject(ticket, exc, 1)
             return ticket
@@ -491,6 +523,8 @@ class SimulationService:
             self._ensure_started()
             with self._lock:
                 self._stats["submitted"] += 1
+                if repaired:
+                    self._stats["repaired"] += 1
             full, created = self._coalescer.add(sig, _WarpEntry(ticket, req))
             if full is not None:
                 self._enqueue_group(full)
@@ -529,11 +563,27 @@ class SimulationService:
                 # programs/n_warps conflict: not a static-analysis matter —
                 # admit and let run_sm fail it per warp, as without verify
                 per_warp = ()
+            fixed_warps: list = []
+            n_repaired = 0
             for p in per_warp:
-                exc = self._admission_error(as_request(p, cfg, **request_kw))
+                req = as_request(p, cfg, **request_kw)
+                exc = self._admission_error(req)
+                if exc is not None and self._auto_annotate:
+                    fixed = self._repair(req)
+                    if fixed is not None:
+                        fixed_warps.append(fixed.program)
+                        n_repaired += 1
+                        continue
                 if exc is not None:
                     self._reject(ticket, exc, max(1, warps))
                     return ticket
+                fixed_warps.append(p)
+            if n_repaired:
+                # admit the repaired cell: the per-warp expansion *is*
+                # the program list now, so pin n_warps to its length
+                programs, n_warps = fixed_warps, len(fixed_warps)
+        else:
+            n_repaired = 0
         job = _SmJob(ticket=ticket, programs=programs, cfg=cfg,
                      kwargs=dict(n_warps=n_warps, inner=inner, policy=policy,
                                  timing_cfg=timing_cfg, **request_kw),
@@ -543,6 +593,7 @@ class SimulationService:
             with self._lock:
                 self._stats["submitted"] += job.warps
                 self._stats["inflight"] += job.warps
+                self._stats["repaired"] += n_repaired
             if self._pool is not None:
                 # cell-shape affinity: cells sharing (inner, policy, cfg,
                 # width) land on one shard and reuse its compiled SM state
@@ -666,6 +717,7 @@ class SimulationService:
             uptime_s=uptime,
             submitted=s["submitted"], completed=s["completed"],
             failed=s["failed"], rejected=s["rejected"],
+            repaired=s["repaired"],
             queue_depth=self._coalescer.depth(),
             inflight=s["inflight"],
             batches=s["batches"], native_batches=s["native_batches"],

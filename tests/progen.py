@@ -27,6 +27,13 @@ Three distributions:
 
 Feature flags compose: each draws from its own seeded rng, and none of
 them perturbs the historical base stream.
+
+Orthogonally, ``unannotated=True`` strips the compiler-planted
+BSSY/BSYNC/BMOV (and spin-loop YIELDs) from any of the three
+distributions after compilation — the same shapes, presented the way the
+annotation synthesizer (:mod:`repro.analysis.transform`) receives them.
+Rng streams are untouched: stripping is a post-pass on the encoded
+program.
 """
 import numpy as np
 
@@ -195,7 +202,7 @@ def _divergent_load(mrng) -> If:
 
 
 def make_program(seed: int, n_bx: int, *, sync_features: bool = False,
-                 mem_features: bool = False):
+                 mem_features: bool = False, unannotated: bool = False):
     """Build one random program; returns ``((prog, mem), cfg)`` or
     ``(None, cfg)`` for legitimately rejected shapes.
 
@@ -206,6 +213,12 @@ def make_program(seed: int, n_bx: int, *, sync_features: bool = False,
     shared cells.  ``mem_features=True`` appends memory-latency-heavy
     shapes (load→dependent-ALU chains, loads in divergent branches) drawn
     from another independent rng; it composes with ``sync_features``.
+
+    ``unannotated=True`` compiles the *same* shape (identical rng
+    streams), then strips the compiler-planted BSSY/BSYNC/BMOV (and
+    spin-loop YIELDs) via :func:`repro.analysis.strip_annotations` — the
+    synthesizer's input distribution.  Annotations the stripper must
+    conservatively retain (WARPSYNC joins, non-canonical regions) stay.
     """
     rng = np.random.default_rng(seed)
     base = [Raw(["LANEID R1", "MOVR R2, R1"]),
@@ -243,23 +256,28 @@ def make_program(seed: int, n_bx: int, *, sync_features: bool = False,
     if sync_features:
         mem[LOCK_CELL] = 0          # the mutex must start free
         mem[COUNTER_CELL] = 0       # counter starts 0 -> must end W
+    if unannotated:
+        from repro.analysis import strip_annotations   # lazy: optional dep
+        prog = strip_annotations(prog, cfg).program
     return (prog, mem), cfg
 
 
 CHECK_REGS = [1, 2, 5, 6, 8, 9, 10]
 
 
-def corpus(n_seeds: int = 40, n_bx: int = 8):
+def corpus(n_seeds: int = 40, n_bx: int = 8, *, unannotated: bool = False):
     """Every distribution's programs for ``n_seeds`` seeds, as
     ``(label, program, cfg)`` triples — the shared walk the static-analysis
     conformance gate, the analyzer benchmark, and CI smoke all iterate
     (rejected seeds are skipped, exactly as the property suites skip them).
+    ``unannotated=True`` passes through to :func:`make_program`.
     """
     out = []
     for tag, kw in (("base", {}), ("sync", {"sync_features": True}),
                     ("mem", {"mem_features": True})):
         for seed in range(n_seeds):
-            made, cfg = make_program(seed, n_bx, **kw)
+            made, cfg = make_program(seed, n_bx, unannotated=unannotated,
+                                     **kw)
             if made is not None:
                 out.append((f"{tag}-{seed}", made[0], cfg))
     return out
